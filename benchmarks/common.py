@@ -1,0 +1,40 @@
+"""Shared benchmark utilities: timing, cloud generation, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_jit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def scene_cloud(seed: int, n: int):
+    """Clustered scene cloud (S3DIS-like occupancy: walls + objects)."""
+    rng = np.random.default_rng(seed)
+    k = max(2, n // 4096)
+    parts = []
+    for i in range(k):
+        c = rng.uniform(-4, 4, 3)
+        s = rng.uniform(0.1, 0.8, 3)
+        parts.append(rng.normal(c, s, (n // k, 3)))
+    rest = n - sum(len(p) for p in parts)
+    if rest:
+        parts.append(rng.uniform(-4, 4, (rest, 3)))
+    return jnp.asarray(np.concatenate(parts).astype(np.float32))

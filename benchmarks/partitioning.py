@@ -1,0 +1,37 @@
+"""Paper Figs. 5/16 (dots): partitioning cost by strategy and scale.
+
+Reports wall-time (CPU; relative ratios are what transfers), the number of
+linear traversals (Fractal's cost unit) and the number of O(n log n) sorts
+(the KD-tree's 'exclusive sorter' cost the paper eliminates: 11 traversals
+vs 2047 sorts at 289K, 133x partitioning speedup on-chip)."""
+from __future__ import annotations
+
+import jax
+
+from repro import core
+from benchmarks.common import emit, scene_cloud, time_jit
+
+
+def run(quick: bool = True):
+    sizes = [1024, 33_000] if quick else [1024, 33_000, 289_000]
+    th = {1024: 64, 33_000: 256, 289_000: 256}
+    for n in sizes:
+        pts = scene_cloud(0, n)
+        base_us = None
+        for strat in (core.FRACTAL, core.UNIFORM, core.OCTREE, core.KDTREE):
+            fn = jax.jit(lambda p, s=strat: core.partition(
+                p, th=th[n], strategy=s))
+            us = time_jit(fn, pts)
+            part = fn(pts)
+            trav = int(part.traversals)
+            sorts = int(part.sort_passes)
+            if strat == core.KDTREE:
+                base_us = us
+            emit(f"partition/{strat}/n{n}", us,
+                 f"traversals={trav};sorts={sorts};"
+                 f"leaves={int(part.num_leaves)};"
+                 f"max_block={int(part.max_leaf_vsize)}")
+        frac_fn = jax.jit(lambda p: core.partition(p, th=th[n]))
+        frac_us = time_jit(frac_fn, pts)
+        emit(f"partition/speedup_vs_kdtree/n{n}", frac_us,
+             f"kdtree_over_fractal={base_us / frac_us:.2f}x")

@@ -1,0 +1,83 @@
+"""Paper Figs. 4/13/15/18: global vs block-parallel point operations.
+
+Measures FPS / ball-query / interpolation / gather in both modes and the
+scaling of the global-search O(n^2) cost with input size — the bottleneck
+shift the paper targets (point ops: 30% of runtime at 1K -> >90% at 289K).
+Also derives the memory-traffic model: global ops touch n points per
+iteration; block ops touch <= 2*th (the paper's on-chip window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.core import ref
+from benchmarks.common import emit, scene_cloud, time_jit
+
+
+def run(quick: bool = True):
+    sizes = [1024, 8192] if quick else [1024, 8192, 33_000, 131_072]
+    th = 256
+    rate, radius, num = 0.25, 0.2, 16
+    for n in sizes:
+        pts = scene_cloud(1, n)
+        valid = jnp.ones((n,), bool)
+        k = n // 4
+
+        # --- global (PointAcc-style baseline) ---
+        g_fps = jax.jit(lambda p: ref.fps(p, valid, k)[0])
+        us_gfps = time_jit(g_fps, pts)
+        sidx = g_fps(pts)
+        centers = pts[sidx]
+        g_bq = jax.jit(lambda p, c: ref.ball_query(
+            p, valid, c, jnp.ones((k,), bool), radius, num)[0])
+        us_gbq = time_jit(g_bq, pts, centers)
+        feats = jnp.ones((k, 64), jnp.float32)
+        g_int = jax.jit(lambda p, c, f: ref.interpolate_3nn(
+            p, c, jnp.ones((k,), bool), f)[0])
+        us_gint = time_jit(g_int, pts, centers, feats)
+
+        # --- block-parallel (FractalCloud) ---
+        def bw_pipeline(p):
+            part = core.partition(p, th=th)
+            samp = core.blockwise_fps(part, rate=rate, k_out=k, bs=th)
+            return part, samp
+
+        part, samp = jax.jit(bw_pipeline)(pts)
+        b_fps = jax.jit(lambda p: core.blockwise_fps(
+            core.partition(p, th=th), rate=rate, k_out=k, bs=th).idx)
+        us_bfps = time_jit(b_fps, pts)
+
+        def _bq(p):
+            part = core.partition(p, th=th)
+            samp = core.blockwise_fps(part, rate=rate, k_out=k, bs=th)
+            return core.blockwise_ball_query(part, samp, radius=radius,
+                                             num=num, w=2 * th).idx
+
+        us_bbq = time_jit(jax.jit(_bq), pts)
+
+        def b_int(p, f):
+            part = core.partition(p, th=th)
+            samp = core.blockwise_fps(part, rate=rate, k_out=k, bs=th)
+            return core.blockwise_interpolate(part, samp, f, wc=128,
+                                              bs=th)[0]
+
+        us_bint = time_jit(jax.jit(b_int), pts, feats)
+
+        emit(f"point_ops/fps/global/n{n}", us_gfps,
+             f"speedup={us_gfps / us_bfps:.2f}x_blockwise")
+        emit(f"point_ops/fps/blockwise/n{n}", us_bfps, "includes_partition")
+        emit(f"point_ops/ballquery/global/n{n}", us_gbq,
+             f"speedup={us_gbq / us_bbq:.2f}x_blockwise")
+        emit(f"point_ops/ballquery/blockwise/n{n}", us_bbq,
+             "includes_partition+fps")
+        emit(f"point_ops/interp/global/n{n}", us_gint,
+             f"speedup={us_gint / us_bint:.2f}x_blockwise")
+        emit(f"point_ops/interp/blockwise/n{n}", us_bint, "")
+
+        # memory-traffic model (paper Fig. 15): bytes touched per op
+        g_traffic = k * n * 12          # every center scans the cloud
+        b_traffic = k * 2 * th * 12     # every center scans its window
+        emit(f"point_ops/traffic_model/n{n}", 0.0,
+             f"global_bytes={g_traffic};block_bytes={b_traffic};"
+             f"reduction={g_traffic / b_traffic:.1f}x")

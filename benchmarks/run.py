@@ -1,0 +1,48 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus a summary).  ``--full`` runs
+paper-scale sizes (289K points, 400-step accuracy training); the default
+quick mode keeps CI fast.
+
+  partitioning   -> paper Figs. 5/16 (sorter vs traverser, 133x claim)
+  point_ops      -> paper Figs. 4/13/15/18 (global vs BPPO, traffic model)
+  threshold      -> paper Fig. 17 (th trade-off)
+  accuracy       -> paper Fig. 14 (network accuracy, global vs BPPO)
+  kernels        -> paper §VI-C RSPU ablation (reuse model + verification)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: partitioning,point_ops,threshold,"
+                         "accuracy,kernels")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from benchmarks import (accuracy, kernels_bench, partitioning,
+                            point_ops, threshold)
+    suites = {
+        "partitioning": partitioning.run,
+        "point_ops": point_ops.run,
+        "threshold": threshold.run,
+        "accuracy": accuracy.run,
+        "kernels": kernels_bench.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in chosen:
+        suites[name](quick=quick)
+    print(f"# total {time.time() - t0:.1f}s, quick={quick}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

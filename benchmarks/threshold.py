@@ -1,0 +1,61 @@
+"""Paper Fig. 17: threshold (th) trade-off — speedup vs accuracy proxies.
+
+Lower th -> more, smaller blocks -> faster point ops but degraded FPS
+coverage / neighbor recall (the paper's >8% loss at th=8, 4.6x-only speedup
+at th=4k; sweet spots th=64 cls / 256 seg)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.core import ref
+from benchmarks.common import emit, scene_cloud, time_jit
+
+
+def run(quick: bool = True):
+    n = 4096 if quick else 33_000
+    ths = [16, 64, 256] if quick else [8, 16, 64, 256, 1024]
+    pts = scene_cloud(2, n)
+    pts_np = np.asarray(pts)
+    valid = jnp.ones((n,), bool)
+    k = n // 4
+    radius, num = 0.25, 16
+
+    gi, _ = jax.jit(lambda p: ref.fps(p, valid, k))(pts)
+    d_all = ((pts_np[:, None, :] - pts_np[None, np.asarray(gi), :]) ** 2
+             ).sum(-1)
+    cov_global = float(np.sqrt(d_all.min(1)).mean())
+
+    for th in ths:
+        def pipeline(p, th=th):
+            part = core.partition(p, th=th)
+            samp = core.blockwise_fps(part, rate=0.25, k_out=k, bs=th)
+            nb = core.blockwise_ball_query(part, samp, radius=radius,
+                                           num=num, w=2 * th)
+            return part, samp, nb
+
+        us = time_jit(jax.jit(pipeline), pts)
+        part, samp, nb = jax.jit(pipeline)(pts)
+        sval = np.asarray(samp.valid)
+        sel = np.asarray(part.coords)[np.asarray(samp.idx)[sval]]
+        d = ((pts_np[:, None, :] - sel[None, :, :]) ** 2).sum(-1)
+        cov = float(np.sqrt(d.min(1)).mean())
+
+        centers = jnp.asarray(sel)
+        g_idx, g_cnt = ref.ball_query(part.coords, part.valid, centers,
+                                      jnp.ones(len(sel), bool), radius, num)
+        g_idx, g_cnt = np.asarray(g_idx), np.asarray(g_cnt)
+        b_idx = np.asarray(nb.idx)[sval]
+        b_msk = np.asarray(nb.mask)[sval]
+        recalls = []
+        for i in range(min(len(sel), 512)):
+            gset = set(g_idx[i][:min(g_cnt[i], num)].tolist())
+            if gset:
+                recalls.append(
+                    len(gset & set(b_idx[i][b_msk[i]].tolist())) / len(gset))
+        emit(f"threshold/th{th}/n{n}", us,
+             f"coverage_ratio={cov / cov_global:.3f};"
+             f"bq_recall={np.mean(recalls):.3f};"
+             f"leaves={int(part.num_leaves)}")

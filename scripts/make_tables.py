@@ -1,0 +1,30 @@
+"""Render EXPERIMENTS.md tables from the dry-run/perf JSON outputs."""
+import json
+import sys
+
+
+def roofline_md(path):
+    data = json.load(open(path))
+    rows = [r for r in data["rows"] if "skipped" not in r]
+    skips = [r for r in data["rows"] if "skipped" in r]
+    out = ["| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) "
+           "| bound | useful | roofline | peak GB/dev | fits 16G |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"[:110]]
+    out[1] = "|---|---|---|---:|---:|---:|---|---:|---:|---:|---|"
+    for r in rows:
+        peak = r["mem_per_device"]["peak_mb"] / 1024
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} "
+            f"| {r['t_collective_s']*1e3:.2f} | {r['bottleneck']} "
+            f"| {r['usefulness']*100:.0f}% "
+            f"| {r['roofline_fraction']*100:.1f}% | {peak:.2f} "
+            f"| {'yes' if peak <= 16 else 'NO'} |")
+    for r in skips:
+        out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                   f"| — | — | — | skipped | — | — | — | — |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(roofline_md(sys.argv[1]))

@@ -1,0 +1,404 @@
+"""Fractal: shape-aware, sorter-free point-cloud partitioning (paper Alg. 1).
+
+The partition engine is *level-synchronous*: level ``l`` holds ``2**l`` tree
+nodes; points are kept contiguous-by-node in depth-first (DFT) order, which
+is the paper's memory layout (Fig. 6).  One level costs a constant number of
+linear passes (segment min/max + 3 cumsums + 1 scatter) — the TPU analogue of
+the paper's "inclusive traverser" (comparators + counters, no sorter).
+
+Strategies share the engine and differ only in how the split value ``mid`` is
+produced:
+
+* ``fractal``  — mid = (max+min)/2 of the *points* in the node (paper).
+* ``uniform``  — mid = center of the node's spatial cell (PNNPU-style);
+  non-adaptive (splits to full depth regardless of occupancy).
+* ``octree``   — uniform cell-center split but adaptive (stops at ``th``);
+  three consecutive binary levels == one octree level.
+* ``kdtree``   — mid = median (Crescent-style); implemented with a real
+  per-level sort so the sorter-vs-traverser cost gap is measurable.
+
+Invariants maintained (tested in tests/test_fractal.py):
+  * ``perm`` is a permutation of [0, n);
+  * every node's range is [valid points | invalid points] (invalid only ever
+    accumulate at the *end* of a range, along the rightmost spine);
+  * every subtree is a contiguous range (DFT property);
+  * every real leaf has ``vsize <= th`` unless ``overflowed`` is set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+FRACTAL = "fractal"
+UNIFORM = "uniform"
+OCTREE = "octree"
+KDTREE = "kdtree"
+STRATEGIES = (FRACTAL, UNIFORM, OCTREE, KDTREE)
+
+_BIG = jnp.float32(3.0e38)
+
+
+def default_depth(n: int, th: int, slack: int = 9, hard_cap: int = 18) -> int:
+    """Static tree depth: ceil(log2(n/th)) plus slack levels.
+
+    The paper's recursion (Alg. 1) is unbounded; with static shapes we give
+    clustered data headroom — midpoint splits only *halve the extent* per
+    level, so zooming into a dense cluster costs extra levels before the
+    point count starts halving.  Adaptive strategies stop early on sparse
+    branches, so extra depth costs little.
+    """
+    if th <= 0:
+        raise ValueError(f"th must be positive, got {th}")
+    base = max(0, math.ceil(math.log2(max(1, n) / th))) if n > th else 0
+    return min(base + (slack if base > 0 else 0), hard_cap)
+
+
+def max_leaves(n: int, th: int, depth: int) -> int:
+    """Static bound on the number of real leaves.
+
+    In a binary tree #leaves = #internal + 1.  Internal (split) nodes all
+    hold > th valid points and are disjoint *within a level*, so level l has
+    at most min(2**l, n // (th+1)) internal nodes.  (They nest across
+    levels, so no global n/(th+1) bound exists — degenerate chains shed one
+    point per level.)
+    """
+    per_level = n // (th + 1)
+    total = sum(min(2 ** l, per_level) for l in range(depth))
+    return int(min(2 ** depth, total + 1))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FractalPartition:
+    """Static-shape partition result (single cloud; vmap for batches)."""
+
+    # Point layout (DFT order).
+    perm: Array            # (n,) int32: sorted = x[perm]
+    coords: Array          # (n, 3) permuted coordinates
+    valid: Array           # (n,) bool, permuted validity
+    # Compacted leaves (DFT order), ML = max_leaves slots.
+    leaf_start: Array      # (ML,) int32 range start into permuted arrays
+    leaf_rsize: Array      # (ML,) int32 range length (incl. trailing invalid)
+    leaf_vsize: Array      # (ML,) int32 number of valid points
+    leaf_depth: Array      # (ML,) int32 tree depth at which the leaf stopped
+    is_leaf: Array         # (ML,) bool slot holds a real leaf
+    # Paper's search-space rule: depth>=2 -> immediate parent; else the leaf.
+    parent_start: Array    # (ML,) int32
+    parent_rsize: Array    # (ML,) int32
+    parent_vsize: Array    # (ML,) int32
+    # Level-D slot bookkeeping (L = 2**depth slots).
+    slot_of_leaf: Array    # (ML,) int32 level-D slot id of each compact leaf
+    leaf_of_slot: Array    # (L,) int32 compact index of slot's leaf (or -1)
+    slot_cum_leaves: Array # (L+1,) int32 prefix count of real leaves by slot
+    # Diagnostics.
+    num_leaves: Array      # () int32
+    traversals: Array      # () int32 levels in which any node split (paper's
+                           # "traversal" count: 11 for 289K @ th=256)
+    sort_passes: Array     # () int32 number of O(n log n) sorts (0 = fractal)
+    overflowed: Array      # () bool some leaf kept >th valid points
+    leaf_capacity_exceeded: Array  # () bool more real leaves than ML slots
+    max_leaf_vsize: Array  # () int32
+
+    @property
+    def n(self) -> int:
+        return self.perm.shape[0]
+
+    @property
+    def ml(self) -> int:
+        return self.leaf_start.shape[0]
+
+
+def _segment_minmax(x: Array, valid: Array, seg: Array, num: int):
+    big = _BIG.astype(x.dtype)
+    lo = jax.ops.segment_min(jnp.where(valid, x, big), seg, num_segments=num,
+                             indices_are_sorted=True)
+    hi = jax.ops.segment_max(jnp.where(valid, x, -big), seg, num_segments=num,
+                             indices_are_sorted=True)
+    return lo, hi
+
+
+def _exclusive_cumsum(x: Array) -> Array:
+    return jnp.concatenate([jnp.zeros((1,), x.dtype), jnp.cumsum(x)[:-1]])
+
+
+def partition(
+    coords: Array,
+    valid: Array | None = None,
+    *,
+    th: int,
+    depth: int | None = None,
+    strategy: str = FRACTAL,
+    max_leaves_: int | None = None,
+) -> FractalPartition:
+    """Partition a point cloud into <=th-point blocks in DFT memory order."""
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    n = coords.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    if depth is None:
+        # Uniform grids are non-adaptive: depth is the grid resolution and
+        # every level-D cell is a leaf, so no imbalance slack is added.
+        depth = (default_depth(n, th, slack=0) if strategy == UNIFORM
+                 else default_depth(n, th))
+    if max_leaves_ is not None:
+        ml = max_leaves_
+    elif strategy == UNIFORM:
+        ml = 2 ** depth  # non-adaptive: every level-D cell is a leaf
+    else:
+        ml = max_leaves(n, th, depth)
+    adaptive = strategy != UNIFORM
+    needs_bbox = strategy in (UNIFORM, OCTREE)
+
+    coords = coords.astype(jnp.float32)
+    pts = coords
+    vld = valid
+    orig = jnp.arange(n, dtype=jnp.int32)
+    node = jnp.zeros((n,), jnp.int32)
+
+    # Node state for the current level (size 2**l).
+    start = jnp.zeros((1,), jnp.int32)
+    rsize = jnp.full((1,), n, jnp.int32)
+    vsize = jnp.sum(vld).astype(jnp.int32)[None]
+    exists = jnp.ones((1,), bool)
+    if needs_bbox:
+        glo = jnp.min(jnp.where(vld[:, None], coords, _BIG), axis=0)
+        ghi = jnp.max(jnp.where(vld[:, None], coords, -_BIG), axis=0)
+        box_lo, box_hi = glo[None], ghi[None]  # (2**l, 3)
+
+    # Per-level leaf records, folded into level-D slots at the end.
+    leaf_records = []  # (level, is_leaf(2**l,), start, rsize, vsize,
+                       #  pstart, prsize, pvsize)
+    traversals = jnp.zeros((), jnp.int32)
+    sort_passes = jnp.zeros((), jnp.int32)
+
+    pstart = start  # parent ranges seen by this level's nodes (root: itself)
+    prsize = rsize
+    pvsize = vsize
+
+    for lvl in range(depth + 1):
+        nn = 2 ** lvl
+        want_split = vsize > th if adaptive else jnp.ones((nn,), bool)
+        active = exists & want_split & (lvl < depth)
+
+        is_leaf_here = exists & ~active
+        leaf_records.append(
+            (lvl, is_leaf_here, start, rsize, vsize, pstart, prsize, pvsize))
+        if lvl == depth:
+            break
+
+        dim = lvl % 3
+        x = pts[:, dim]
+        if strategy == FRACTAL:
+            lo, hi = _segment_minmax(x, vld, node, nn)
+            mid = (lo + hi) * 0.5
+        elif strategy in (UNIFORM, OCTREE):
+            mid = (box_lo[:, dim] + box_hi[:, dim]) * 0.5
+        else:  # KDTREE: median via an honest per-level sort (the paper's
+            # "exclusive sorter" — costed so benchmarks expose the gap).
+            skey = jnp.where(vld, x, _BIG)
+            order = jnp.lexsort((skey, node))
+            sorted_node = node[order]
+            pos_in_node = jnp.arange(n, dtype=jnp.int32) - start[sorted_node]
+            med_rank = (jnp.maximum(vsize, 1) - 1) // 2
+            is_med = pos_in_node == med_rank[sorted_node]
+            mid = jax.ops.segment_max(
+                jnp.where(is_med, skey[order], -_BIG), sorted_node,
+                num_segments=nn, indices_are_sorted=True)
+            sort_passes = sort_passes + 1
+
+        traversals = traversals + jnp.any(active).astype(jnp.int32)
+
+        node_active = active[node]
+        node_mid = mid[node]
+        # Partition key: 0 = left-valid, 1 = right-valid, 2 = invalid (always
+        # ordered last within the node; goes right iff the node splits).
+        side = (x > node_mid).astype(jnp.int32)
+        key = jnp.where(vld, jnp.where(node_active, side, 0), 2)
+        child = jnp.where(node_active, (key > 0).astype(jnp.int32), 0)
+
+        # Stable segmented partition via cumsums (no sort). Points are
+        # contiguous by node, so within-node running ranks are global
+        # exclusive cumsums minus their value at the node start.
+        onehot = [(key == k).astype(jnp.int32) for k in range(3)]
+        cnt = [jax.ops.segment_sum(o, node, num_segments=nn,
+                                   indices_are_sorted=True) for o in onehot]
+        excl = [_exclusive_cumsum(o) for o in onehot]
+        rank = sum(jnp.where(key == k, excl[k] - excl[k][start[node]], 0)
+                   for k in range(3))
+        offset = (jnp.where(key >= 1, cnt[0][node], 0)
+                  + jnp.where(key >= 2, cnt[1][node], 0))
+        newpos = start[node] + offset + rank
+
+        scat = lambda a: jnp.zeros_like(a).at[newpos].set(a)
+        pts = scat(pts)
+        vld = scat(vld)
+        orig = scat(orig)
+        new_node = node * 2 + child
+        node = scat(new_node)
+
+        # Child node state (2**(l+1)).
+        idx2 = jnp.arange(2 * nn, dtype=jnp.int32)
+        par = idx2 // 2
+        is_right = idx2 % 2
+        l_r = cnt[0]
+        l_v = cnt[0]
+        r_v = jnp.where(active, cnt[1], 0)
+        r_r = jnp.where(active, rsize - cnt[0], 0)
+        l_rr = jnp.where(active, l_r, rsize)   # inactive: all to child 0
+        l_vv = jnp.where(active, l_v, vsize)
+        new_rsize = jnp.where(is_right == 0, l_rr[par], r_r[par])
+        new_vsize = jnp.where(is_right == 0, l_vv[par], r_v[par])
+        new_start = _exclusive_cumsum(new_rsize).astype(jnp.int32)
+        new_exists = exists[par] & active[par]
+
+        pstart, prsize, pvsize = start[par], rsize[par], vsize[par]
+        if needs_bbox:
+            new_lo = box_lo[par]
+            new_hi = box_hi[par]
+            d_onehot = (jnp.arange(3) == dim)
+            new_lo = jnp.where(d_onehot[None, :] & (is_right == 1)[:, None],
+                               mid[par][:, None], new_lo)
+            new_hi = jnp.where(d_onehot[None, :] & (is_right == 0)[:, None],
+                               mid[par][:, None], new_hi)
+            box_lo, box_hi = new_lo, new_hi
+
+        start, rsize, vsize, exists = new_start, new_rsize, new_vsize, new_exists
+
+    # ---- Fold per-level leaves into level-D slots, then compact. ----
+    L = 2 ** depth
+    slot_is_leaf = jnp.zeros((L,), bool)
+    slot_start = jnp.zeros((L,), jnp.int32)
+    slot_rsize = jnp.zeros((L,), jnp.int32)
+    slot_vsize = jnp.zeros((L,), jnp.int32)
+    slot_depth = jnp.zeros((L,), jnp.int32)
+    slot_pstart = jnp.zeros((L,), jnp.int32)
+    slot_prsize = jnp.zeros((L,), jnp.int32)
+    slot_pvsize = jnp.zeros((L,), jnp.int32)
+    for (lvl, isl, st, rs, vs, ps, prs, pvs) in leaf_records:
+        shift = depth - lvl
+        slots = (jnp.arange(2 ** lvl, dtype=jnp.int32) << shift)
+        # Paper rule: depth-0/1 leaves search themselves; deeper leaves use
+        # their immediate parent.
+        use_self = lvl <= 1
+        p_st = st if use_self else ps
+        p_rs = rs if use_self else prs
+        p_vs = vs if use_self else pvs
+        upd = lambda dst, val: dst.at[slots].set(jnp.where(isl, val, dst[slots]))
+        slot_is_leaf = slot_is_leaf.at[slots].set(
+            jnp.where(isl, True, slot_is_leaf[slots]))
+        slot_start = upd(slot_start, st)
+        slot_rsize = upd(slot_rsize, rs)
+        slot_vsize = upd(slot_vsize, vs)
+        slot_depth = upd(slot_depth, jnp.full_like(st, lvl))
+        slot_pstart = upd(slot_pstart, p_st)
+        slot_prsize = upd(slot_prsize, p_rs)
+        slot_pvsize = upd(slot_pvsize, p_vs)
+
+    cum = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                           jnp.cumsum(slot_is_leaf.astype(jnp.int32))])
+    num_leaves = cum[-1]
+    compact_idx = cum[:-1]  # slot -> compact position (where is_leaf)
+    leaf_of_slot = jnp.where(slot_is_leaf, compact_idx, -1)
+
+    def compact(a, fill=0):
+        out = jnp.full((ml,), fill, a.dtype)
+        return out.at[jnp.where(slot_is_leaf, compact_idx, ml)].set(
+            a, mode="drop")
+
+    is_leaf_c = jnp.arange(ml) < num_leaves
+    slot_ids = jnp.arange(L, dtype=jnp.int32)
+    part = FractalPartition(
+        perm=orig,
+        coords=pts,
+        valid=vld,
+        leaf_start=compact(slot_start),
+        leaf_rsize=compact(slot_rsize),
+        leaf_vsize=compact(slot_vsize),
+        leaf_depth=compact(slot_depth),
+        is_leaf=is_leaf_c,
+        parent_start=compact(slot_pstart),
+        parent_rsize=compact(slot_prsize),
+        parent_vsize=compact(slot_pvsize),
+        slot_of_leaf=compact(slot_ids, fill=-1),
+        leaf_of_slot=leaf_of_slot,
+        slot_cum_leaves=cum,
+        num_leaves=num_leaves,
+        traversals=traversals,
+        sort_passes=sort_passes,
+        overflowed=jnp.any(slot_is_leaf & (slot_vsize > th)),
+        leaf_capacity_exceeded=num_leaves > ml,
+        max_leaf_vsize=jnp.max(jnp.where(slot_is_leaf, slot_vsize, 0)),
+    )
+    return part
+
+
+# ---------------------------------------------------------------------------
+# Block / window views (padded gathers over the DFT-contiguous layout).
+# ---------------------------------------------------------------------------
+
+def leaf_from(leaf_start, leaf_vsize, is_leaf, data, bs: int):
+    """Slice-level leaf view (leading dim = any subset of leaves)."""
+    n = data.shape[0]
+    j = jnp.arange(bs, dtype=jnp.int32)
+    idx = leaf_start[:, None] + j[None, :]
+    mask = is_leaf[:, None] & (j[None, :] < leaf_vsize[:, None])
+    idx = jnp.clip(idx, 0, n - 1)
+    return data[idx], mask, idx
+
+
+def leaf_view(part: FractalPartition, data: Array, bs: int):
+    """Gather per-leaf data to a padded (ML, bs, ...) view.
+
+    ``data`` must be in permuted (DFT) order, leading dim n.  Returns
+    (view, mask) where mask marks valid points of real leaves.
+    """
+    return leaf_from(part.leaf_start, part.leaf_vsize, part.is_leaf, data,
+                     bs)
+
+
+def window_from(leaf_start, leaf_rsize, parent_start, parent_rsize,
+                parent_vsize, is_leaf, data, valid, w: int):
+    """Slice-level search-space window (see window_view)."""
+    n = data.shape[0]
+    want = (leaf_start - jnp.maximum(0, (w - leaf_rsize) // 2))
+    lo = jnp.clip(want, parent_start,
+                  jnp.maximum(parent_start, parent_start + parent_rsize - w))
+    j = jnp.arange(w, dtype=jnp.int32)
+    idx = lo[:, None] + j[None, :]
+    valid_end = parent_start + parent_vsize
+    mask = (is_leaf[:, None]
+            & (idx < valid_end[:, None])
+            & (idx < parent_start[:, None] + parent_rsize[:, None]))
+    mask = mask & valid[jnp.clip(idx, 0, n - 1)]
+    idx = jnp.clip(idx, 0, n - 1)
+    return data[idx], mask, idx
+
+
+def window_view(part: FractalPartition, data: Array, w: int):
+    """Per-leaf *search-space* window into the parent range, padded to w.
+
+    The window is centered on the leaf and clamped inside the parent range,
+    so the leaf itself is always covered when w >= leaf_rsize (bounded
+    truncation of pathological parents — the on-chip block budget of the
+    paper).  Invalid points only ever live at the end of a range; windows may
+    still cover them, so a mask is returned.
+    """
+    return window_from(part.leaf_start, part.leaf_rsize, part.parent_start,
+                       part.parent_rsize, part.parent_vsize, part.is_leaf,
+                       data, part.valid, w)
+
+
+def subtree_slot_range(part: FractalPartition, depth_arr: Array,
+                       slot: Array, total_depth: int):
+    """Level-D slot range [lo, hi) of the subtree rooted at a leaf's parent."""
+    shift = jnp.maximum(total_depth - jnp.maximum(depth_arr - 1, 0), 0)
+    parent_slot = (slot >> shift) << shift
+    return parent_slot, parent_slot + (1 << shift)

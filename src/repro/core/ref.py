@@ -1,0 +1,129 @@
+"""Global point operations — the paper's O(n^2) baseline (PointAcc-style).
+
+These are the *oracles*: block-parallel ops in bppo.py are validated against
+them (exactness where the search spaces coincide; recall/coverage metrics
+where the paper accepts bounded deviation).  They are also the "Original"
+bars in the paper's Figs. 3/13/15.
+
+Conventions
+-----------
+* All ops take a ``valid`` mask so padded clouds compose.
+* Ball query returns the ``num`` *nearest* in-radius neighbors (deterministic
+  under permutation; the CUDA original returns the first-found ``num``).
+  Empty slots are padded with the nearest neighbor index.
+* FPS starts from the first valid point (the paper uses a random start; pass
+  ``start`` for seeded variants).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+_INF = jnp.float32(3.0e38)
+
+
+def pairwise_sqdist(a: Array, b: Array) -> Array:
+    """(m,3),(n,3) -> (m,n) squared euclidean distances."""
+    diff = a[:, None, :] - b[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def fps(coords: Array, valid: Array, k: int, start: Array | int = None):
+    """Farthest point sampling. Returns (idx (k,), sel_valid (k,)).
+
+    Iteratively picks the point farthest from the selected set — k linear
+    passes over n points = the paper's O(n*k) global search.
+    """
+    n = coords.shape[0]
+    coords = coords.astype(jnp.float32)
+    if start is None:
+        start = jnp.argmax(valid).astype(jnp.int32)
+    else:
+        start = jnp.asarray(start, jnp.int32)
+    nvalid = jnp.sum(valid)
+
+    def dist_to(i):
+        d = coords - coords[i][None, :]
+        return jnp.sum(d * d, axis=-1)
+
+    mind0 = jnp.where(valid, dist_to(start), -_INF).at[start].set(-_INF)
+
+    def step(mind, _):
+        nxt = jnp.argmax(mind).astype(jnp.int32)
+        mind = jnp.minimum(mind, jnp.where(valid, dist_to(nxt), -_INF))
+        mind = mind.at[nxt].set(-_INF)
+        return mind, nxt
+
+    _, rest = jax.lax.scan(step, mind0, None, length=k - 1)
+    idx = jnp.concatenate([start[None], rest])
+    sel_valid = jnp.arange(k) < nvalid
+    return idx, sel_valid
+
+
+def _bq_one(center, cvalid, src, src_valid, r2, num):
+    d = jnp.sum((src - center[None, :]) ** 2, axis=-1)
+    d = jnp.where(src_valid, d, _INF)
+    neg, idx = jax.lax.top_k(-d, num)
+    d_k = -neg
+    in_r = d_k <= r2
+    cnt = jnp.sum((d <= r2).astype(jnp.int32))
+    idx = jnp.where(in_r, idx, idx[0])  # pad with nearest
+    cnt = jnp.where(cvalid, cnt, 0)
+    return idx.astype(jnp.int32), cnt
+
+
+def ball_query(src: Array, src_valid: Array, centers: Array,
+               centers_valid: Array, radius: float, num: int,
+               chunk: int = 256):
+    """(m, num) neighbor indices of up-to-num nearest in-radius points."""
+    r2 = jnp.float32(radius) ** 2
+    m = centers.shape[0]
+    pad = (-m) % chunk
+    c = jnp.pad(centers.astype(jnp.float32), ((0, pad), (0, 0)))
+    cv = jnp.pad(centers_valid, (0, pad))
+
+    def body(carry, xs):
+        cc, ccv = xs
+        idx, cnt = jax.vmap(
+            lambda p, v: _bq_one(p, v, src.astype(jnp.float32), src_valid,
+                                 r2, num))(cc, ccv)
+        return carry, (idx, cnt)
+
+    _, (idx, cnt) = jax.lax.scan(
+        body, None, (c.reshape(-1, chunk, 3), cv.reshape(-1, chunk)))
+    return idx.reshape(-1, num)[:m], cnt.reshape(-1)[:m]
+
+
+def knn(src: Array, src_valid: Array, queries: Array, k: int,
+        chunk: int = 256):
+    """k nearest neighbors: returns (idx (m,k), sqdist (m,k))."""
+    m = queries.shape[0]
+    pad = (-m) % chunk
+    q = jnp.pad(queries.astype(jnp.float32), ((0, pad), (0, 0)))
+    srcf = src.astype(jnp.float32)
+
+    def body(carry, qq):
+        d = pairwise_sqdist(qq, srcf)
+        d = jnp.where(src_valid[None, :], d, _INF)
+        neg, idx = jax.lax.top_k(-d, k)
+        return carry, (idx.astype(jnp.int32), -neg)
+
+    _, (idx, d2) = jax.lax.scan(body, None, q.reshape(-1, chunk, 3))
+    return idx.reshape(-1, k)[:m], d2.reshape(-1, k)[:m]
+
+
+def gather(feats: Array, idx: Array) -> Array:
+    """Feature gathering: feats (n, c), idx (...,) -> (..., c)."""
+    return feats[idx]
+
+
+def interpolate_3nn(queries: Array, src: Array, src_valid: Array,
+                    feats: Array, eps: float = 1e-8):
+    """Inverse-distance-weighted 3-NN feature propagation (paper Fig. 2c)."""
+    idx, d2 = knn(src, src_valid, queries, k=3)
+    w = 1.0 / (d2 + eps)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.sum(feats[idx] * w[..., None], axis=-2), idx, w

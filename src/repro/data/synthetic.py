@@ -1,0 +1,145 @@
+"""Synthetic parametric point-cloud data (S3DIS/ModelNet stand-in).
+
+Offline container: the paper's datasets are unavailable, so accuracy-trend
+experiments (global ops vs BPPO, threshold sweeps — paper Figs. 14/17) run
+on procedurally generated clouds with the *same comparison structure*.
+
+The pipeline is **resumable**: batches are a pure function of
+(seed, step) via counter-based RNG (fold_in), so a restart from a
+checkpointed step reproduces the exact stream — part of the fault-tolerance
+story (train/checkpoint.py stores the step only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NUM_SHAPES = 6  # sphere, cube, torus, cylinder, plane, helix
+
+
+def _sphere(u, v, _):
+    theta = 2 * jnp.pi * u
+    phi = jnp.arccos(jnp.clip(2 * v - 1, -1, 1))
+    return jnp.stack([jnp.sin(phi) * jnp.cos(theta),
+                      jnp.sin(phi) * jnp.sin(theta),
+                      jnp.cos(phi)], -1)
+
+
+def _cube(u, v, w):
+    face = jnp.floor(w * 6).astype(jnp.int32) % 6
+    a = u * 2 - 1
+    b = v * 2 - 1
+    one = jnp.ones_like(a)
+    faces = jnp.stack([
+        jnp.stack([a, b, one], -1), jnp.stack([a, b, -one], -1),
+        jnp.stack([a, one, b], -1), jnp.stack([a, -one, b], -1),
+        jnp.stack([one, a, b], -1), jnp.stack([-one, a, b], -1)], 0)
+    return jnp.take_along_axis(
+        faces, face[None, :, None], axis=0)[0]
+
+
+def _torus(u, v, _):
+    theta, phi = 2 * jnp.pi * u, 2 * jnp.pi * v
+    r, R = 0.3, 1.0
+    return jnp.stack([(R + r * jnp.cos(phi)) * jnp.cos(theta),
+                      (R + r * jnp.cos(phi)) * jnp.sin(theta),
+                      r * jnp.sin(phi)], -1)
+
+
+def _cylinder(u, v, _):
+    theta = 2 * jnp.pi * u
+    return jnp.stack([jnp.cos(theta), jnp.sin(theta), 2 * v - 1], -1)
+
+
+def _plane(u, v, _):
+    return jnp.stack([2 * u - 1, 2 * v - 1, jnp.zeros_like(u)], -1)
+
+
+def _helix(u, v, _):
+    t = 4 * jnp.pi * u
+    return jnp.stack([jnp.cos(t) * (1 + 0.1 * v),
+                      jnp.sin(t) * (1 + 0.1 * v),
+                      (t / (2 * jnp.pi)) - 1], -1)
+
+
+_SHAPES = (_sphere, _cube, _torus, _cylinder, _plane, _helix)
+
+
+def _sample_shape(key, shape_id, n, noise=0.02):
+    ku, kv, kw, kn, kr = jax.random.split(key, 5)
+    u = jax.random.uniform(ku, (n,))
+    v = jax.random.uniform(kv, (n,))
+    w = jax.random.uniform(kw, (n,))
+    pts = jax.lax.switch(shape_id, [
+        functools.partial(f) for f in _SHAPES], u, v, w)
+    pts = pts + noise * jax.random.normal(kn, (n, 3))
+    # random rotation (z) + anisotropic scale: breaks axis alignment so the
+    # partitioner cannot cheat.
+    ang = jax.random.uniform(kr, (), minval=0, maxval=2 * jnp.pi)
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    rot = jnp.array([[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]])
+    scale = jax.random.uniform(jax.random.fold_in(kr, 1), (3,),
+                               minval=0.7, maxval=1.3)
+    return (pts * scale) @ rot.T
+
+
+def classification_batch(seed: int, step: int, batch: int, n: int):
+    """Returns (points (B, n, 3), labels (B,)) — one shape per cloud."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+
+    def one(k):
+        kl, ks = jax.random.split(k)
+        label = jax.random.randint(kl, (), 0, NUM_SHAPES)
+        return _sample_shape(ks, label, n), label
+
+    pts, labels = jax.vmap(one)(jax.random.split(key, batch))
+    return pts, labels
+
+
+def segmentation_batch(seed: int, step: int, batch: int, n: int,
+                       parts: int = 3):
+    """Scene = `parts` displaced shapes; per-point label = shape id."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step + (1 << 20))
+    per = n // parts
+
+    def one(k):
+        ks = jax.random.split(k, parts)
+
+        def piece(kk):
+            kl, kp, kd = jax.random.split(kk, 3)
+            label = jax.random.randint(kl, (), 0, NUM_SHAPES)
+            pts = _sample_shape(kp, label, per)
+            off = jax.random.uniform(kd, (3,), minval=-2.5, maxval=2.5)
+            return pts + off, jnp.full((per,), label)
+
+        ps, ls = jax.vmap(piece)(ks)
+        pts = ps.reshape(-1, 3)
+        lab = ls.reshape(-1)
+        pad = n - pts.shape[0]
+        if pad:
+            pts = jnp.concatenate([pts, pts[:pad]])
+            lab = jnp.concatenate([lab, lab[:pad]])
+        return pts, lab
+
+    pts, labels = jax.vmap(one)(jax.random.split(key, batch))
+    return pts, labels
+
+
+@dataclasses.dataclass
+class DataState:
+    """Resumable pipeline cursor (checkpointed alongside params)."""
+    seed: int
+    step: int
+
+    def next_classification(self, batch, n):
+        out = classification_batch(self.seed, self.step, batch, n)
+        self.step += 1
+        return out
+
+    def next_segmentation(self, batch, n, parts=3):
+        out = segmentation_batch(self.seed, self.step, batch, n, parts)
+        self.step += 1
+        return out

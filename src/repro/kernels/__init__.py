@@ -1,0 +1,13 @@
+"""FractalCloud Pallas TPU kernels.
+
+Per kernel: ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec tiling,
+``ref.py`` the pure-jnp oracle with the identical contract, ``ops.py`` the
+jit'd public wrappers (layout/padding + impl dispatch).
+"""
+from repro.kernels import ops
+from repro.kernels.ops import (ball_query_blocks, fps_blocks,
+                               fractal_level_blocks, gather_blocks,
+                               knn_blocks)
+
+__all__ = ["ops", "fps_blocks", "ball_query_blocks", "knn_blocks",
+           "gather_blocks", "fractal_level_blocks"]

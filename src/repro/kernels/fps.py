@@ -1,0 +1,71 @@
+"""Block-parallel FPS Pallas kernel — the RSPU sampling mode (paper §V-C).
+
+One grid step = one Fractal leaf (the paper's inter-block parallelism): the
+block's coordinates live in VMEM for the whole FPS loop, the running
+min-distance vector is a VMEM scratch, and the ASIC's window-check skip is
+realized as masking (visited lanes pinned to -inf; see DESIGN.md §2).
+
+Layout: coords are (NB, 3, BS) so the point axis is the 128-lane axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import NEG, select_coord
+
+
+def _fps_kernel(coords_ref, vmask_ref, idx_ref, mind_ref, *, k: int):
+    c = coords_ref[0]          # (3, BS)
+    v = vmask_ref[0] > 0       # (1, BS)
+    bs = c.shape[-1]
+
+    def d2_to(i):
+        p = select_coord(c, i)                        # (3,)
+        diff = c - p[:, None]
+        return jnp.sum(diff * diff, axis=0)[None, :]  # (1, BS)
+
+    # First valid lane (valid-prefix layout => lane 0 of real blocks).
+    start = jnp.argmax(v.astype(jnp.float32)).astype(jnp.int32)
+    mind = jnp.where(v, d2_to(start), NEG)
+    iot = lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    mind = jnp.where(iot == start, NEG, mind)
+    mind_ref[...] = mind
+    idx_ref[0, 0] = start
+
+    def body(j, _):
+        m = mind_ref[...]
+        nxt = jnp.argmax(m).astype(jnp.int32)
+        m = jnp.minimum(m, jnp.where(v, d2_to(nxt), NEG))
+        m = jnp.where(iot == nxt, NEG, m)
+        mind_ref[...] = m
+        idx_ref[0, j] = nxt
+        return 0
+
+    if k > 1:
+        lax.fori_loop(1, k, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def fps_blocks(coords: jax.Array, vmask: jax.Array, *, k: int,
+               interpret: bool = True) -> jax.Array:
+    """coords (NB, 3, BS) f32, vmask (NB, 1, BS) {0,1} -> idx (NB, k) i32."""
+    nb, _, bs = coords.shape
+    kernel = functools.partial(_fps_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 3, bs), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1, bs), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, k), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, bs), jnp.float32)],
+        interpret=interpret,
+    )(coords.astype(jnp.float32), vmask.astype(jnp.float32))

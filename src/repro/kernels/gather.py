@@ -1,0 +1,46 @@
+"""Block-wise gathering Pallas kernel (paper BWGa, §IV-B / §V-B).
+
+The ASIC insight: after Fractal, each gather unit only touches one parent
+window, which fits on-chip — no global random access.  The TPU analogue:
+the window's features are one VMEM tile per grid step, and the *random*
+in-window gather becomes a one-hot (M, W) x (W, C) matmul on the MXU —
+random access converted to dense compute, the canonical TPU trade.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(feats_ref, idx_ref, out_ref):
+    f = feats_ref[0]             # (W, C)
+    idx = idx_ref[0]             # (1, M) i32
+    w = f.shape[0]
+    m = idx.shape[-1]
+    iot = lax.broadcasted_iota(jnp.int32, (m, w), 1)
+    onehot = (iot == idx[0][:, None]).astype(f.dtype)
+    out_ref[0] = jnp.dot(onehot, f, preferred_element_type=f.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_blocks(window_feats: jax.Array, idx: jax.Array, *,
+                  interpret: bool = True) -> jax.Array:
+    """window_feats (NB, W, C), idx (NB, M) local-to-window
+    -> (NB, M, C) gathered features."""
+    nb, w, c = window_feats.shape
+    m = idx.shape[-1]
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, w, c), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1, m), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, c), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, c), window_feats.dtype),
+        interpret=interpret,
+    )(window_feats, idx.astype(jnp.int32)[:, None, :])

@@ -1,0 +1,108 @@
+"""jit'd public wrappers for the FractalCloud kernels.
+
+Each op accepts ``impl``:
+
+* ``"pallas"``    — the TPU kernel (interpret=True off-TPU, compiled on TPU);
+* ``"xla"``       — the pure-jnp oracle (kernels/ref.py), which is also what
+                    core/bppo.py uses by default on CPU.
+
+Wrappers own the layout contract: user-facing tensors are (NB, BS, 3) /
+(NB, BS); kernels consume lane-major (NB, 3, BS') with BS' padded to the
+128-lane boundary (padded lanes masked invalid).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ball_query as _bq
+from repro.kernels import fps as _fps
+from repro.kernels import fractal_engine as _fe
+from repro.kernels import gather as _ga
+from repro.kernels import knn as _knn
+from repro.kernels import ref as _ref
+
+LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_lanes(x, axis, mult=LANE, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _to_lane_major(coords, mask):
+    """(NB, BS, 3), (NB, BS) -> (NB, 3, BS'), (NB, 1, BS')."""
+    c = _pad_lanes(jnp.swapaxes(coords, -1, -2), -1)
+    m = _pad_lanes(mask.astype(jnp.float32)[:, None, :], -1)
+    return c, m
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl"))
+def fps_blocks(coords, mask, *, k: int, impl: str = "pallas"):
+    """coords (NB, BS, 3), mask (NB, BS) -> sampled in-block idx (NB, k)."""
+    c, m = _to_lane_major(coords, mask)
+    if impl == "pallas":
+        return _fps.fps_blocks(c, m, k=k, interpret=not _on_tpu())
+    return _ref.fps_blocks(c, m, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("radius", "num", "impl"))
+def ball_query_blocks(centers, cmask, window, wmask, *, radius: float,
+                      num: int, impl: str = "pallas"):
+    """centers (NB,KC,3), cmask (NB,KC), window (NB,W,3), wmask (NB,W)
+    -> (idx (NB,KC,num) local-to-window, d2, cnt (NB,KC))."""
+    c, cm = _to_lane_major(centers, cmask)
+    w, wm = _to_lane_major(window, wmask)
+    if impl == "pallas":
+        return _bq.ball_query_blocks(c, cm, w, wm, radius=radius, num=num,
+                                     interpret=not _on_tpu())
+    return _ref.ball_query_blocks(c, cm, w, wm, radius=radius, num=num)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl"))
+def knn_blocks(queries, window, wmask, *, k: int, impl: str = "pallas"):
+    """queries (NB,Q,3), window (NB,W,3), wmask (NB,W)
+    -> (idx (NB,Q,k) local-to-window, d2)."""
+    q, _ = _to_lane_major(queries, jnp.ones(queries.shape[:2], bool))
+    w, wm = _to_lane_major(window, wmask)
+    if impl == "pallas":
+        return _knn.knn_blocks(q, w, wm, k=k, interpret=not _on_tpu())
+    return _ref.knn_blocks(q, w, wm, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def gather_blocks(window_feats, idx, *, impl: str = "pallas"):
+    """window_feats (NB, W, C), idx (NB, M) -> (NB, M, C)."""
+    if impl == "pallas":
+        f = _pad_lanes(window_feats, -1)          # C on lanes
+        f = _pad_lanes(f, -2, mult=8)             # W on sublanes
+        out = _ga.gather_blocks(f, idx, interpret=not _on_tpu())
+        return out[..., :window_feats.shape[-1]]
+    return _ref.gather_blocks(window_feats, idx)
+
+
+@functools.partial(jax.jit, static_argnames=("da", "db", "impl"))
+def fractal_level_blocks(coords, mask, mid, *, da: int, db: int,
+                         impl: str = "pallas"):
+    """coords (NB,BS,3), mask (NB,BS), mid (NB,) ->
+    (side (NB,BS) i32, left_count (NB,), child_stats (NB,4))."""
+    bs = coords.shape[1]
+    c, m = _to_lane_major(coords, mask)
+    if impl == "pallas":
+        side, lcnt, stats = _fe.fractal_level_blocks(
+            c, m, mid[:, None], da=da, db=db, interpret=not _on_tpu())
+    else:
+        side, lcnt, stats = _ref.fractal_level_blocks(
+            c, m, mid[:, None], da=da, db=db)
+    return side[:, :bs], lcnt, stats

@@ -1,0 +1,105 @@
+"""Pure-jnp oracles mirroring each Pallas kernel's exact contract.
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle; tie-breaking
+(argmax/argmin pick the first extremum) matches by construction because both
+sides evaluate the same formulas in the same order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import INF, NEG
+
+
+def _fps_one(coords, vmask, k):
+    """coords (3, BS), vmask (BS,) -> (k,) i32."""
+    c = coords.astype(jnp.float32)
+    v = vmask > 0
+    bs = c.shape[-1]
+
+    def d2_to(i):
+        diff = c - c[:, i][:, None]
+        return jnp.sum(diff * diff, axis=0)
+
+    start = jnp.argmax(v.astype(jnp.float32)).astype(jnp.int32)
+    iot = jnp.arange(bs, dtype=jnp.int32)
+    mind = jnp.where(v, d2_to(start), NEG)
+    mind = jnp.where(iot == start, NEG, mind)
+
+    def step(m, _):
+        nxt = jnp.argmax(m).astype(jnp.int32)
+        m = jnp.minimum(m, jnp.where(v, d2_to(nxt), NEG))
+        m = jnp.where(iot == nxt, NEG, m)
+        return m, nxt
+
+    _, rest = jax.lax.scan(step, mind, None, length=k - 1)
+    return jnp.concatenate([start[None], rest])
+
+
+def fps_blocks(coords, vmask, *, k):
+    return jax.vmap(lambda c, m: _fps_one(c, m[0], k))(
+        coords, vmask)
+
+
+def _topk_min(d, num):
+    iot = jnp.arange(d.shape[-1], dtype=jnp.int32)[None, :]
+    idxs, vals = [], []
+    for _ in range(num):
+        v = jnp.min(d, axis=-1)
+        i = jnp.argmin(d, axis=-1).astype(jnp.int32)
+        idxs.append(i)
+        vals.append(v)
+        d = jnp.where(iot == i[:, None], INF, d)
+    return jnp.stack(idxs, -1), jnp.stack(vals, -1)
+
+
+def _sqdist(a, b):
+    a2 = jnp.sum(a * a, axis=0)[:, None]
+    b2 = jnp.sum(b * b, axis=0)[None, :]
+    return a2 + b2 - 2.0 * (a.T @ b)
+
+
+def ball_query_blocks(centers, cmask, window, wmask, *, radius, num):
+    r2 = jnp.float32(radius) ** 2
+
+    def one(c, cm, w, wm):
+        d = _sqdist(c.astype(jnp.float32), w.astype(jnp.float32))
+        d = jnp.where(wm[0] > 0, d, INF)
+        cnt = jnp.where(cm[0] > 0,
+                        jnp.sum(((d <= r2) & (wm[0][None, :] > 0)),
+                                axis=-1), 0).astype(jnp.int32)
+        idx, val = _topk_min(d, num)
+        return idx, val, cnt
+
+    return jax.vmap(one)(centers, cmask, window, wmask)
+
+
+def knn_blocks(queries, window, wmask, *, k):
+    def one(q, w, wm):
+        d = _sqdist(q.astype(jnp.float32), w.astype(jnp.float32))
+        d = jnp.where(wm[0] > 0, d, INF)
+        return _topk_min(d, k)
+
+    return jax.vmap(one)(queries, window, wmask)
+
+
+def gather_blocks(window_feats, idx):
+    return jax.vmap(lambda f, i: f[i])(window_feats, idx)
+
+
+def fractal_level_blocks(coords, vmask, mid, *, da, db):
+    def one(c, vm, m):
+        v = vm[0] > 0
+        xa, xb = c[da], c[db]
+        side = (xa > m[0]) & v
+        left = v & ~side
+        stats = jnp.stack([
+            jnp.min(jnp.where(left, xb, INF)),
+            jnp.max(jnp.where(left, xb, NEG)),
+            jnp.min(jnp.where(side, xb, INF)),
+            jnp.max(jnp.where(side, xb, NEG)),
+        ])
+        return side.astype(jnp.int32), jnp.sum(left.astype(jnp.int32)), stats
+
+    return jax.vmap(one)(coords, vmask, mid)

@@ -1,0 +1,284 @@
+"""GQA attention (full/prefill and decode-with-cache paths).
+
+Sharding (baseline v0, DESIGN.md §6): *sequence-parallel* attention — the
+query sequence is sharded over the ``model`` mesh axis for train/prefill and
+the KV-cache sequence for decode.  This is uniform over every head count
+(9-head smollm and 64-head chameleon alike), at the cost of per-layer KV
+all-gathers; head-sharded variants are a §Perf exploration.
+
+GQA never materializes repeated KV: queries are reshaped to
+(B, S, KV, group, hd) and contracted against (B, S, KV, hd) directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.logical import lc
+from repro.lm.layers import dense, dense_init, rmsnorm, rmsnorm_init, rope, \
+    softcap
+
+Array = jax.Array
+NEG = -2.0e38
+
+
+def attn_init(key, d, n_heads, n_kv, head_dim, *, qk_norm=False,
+              dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["wq"], a["wq"] = dense_init(k1, d, n_heads * head_dim,
+                                  ("embed_fsdp", "ff"), dtype=dtype)
+    p["wk"], a["wk"] = dense_init(k2, d, n_kv * head_dim,
+                                  ("embed_fsdp", "ff"), dtype=dtype)
+    p["wv"], a["wv"] = dense_init(k3, d, n_kv * head_dim,
+                                  ("embed_fsdp", "ff"), dtype=dtype)
+    p["wo"], a["wo"] = dense_init(k4, n_heads * head_dim, d,
+                                  ("ff", "embed_fsdp"), dtype=dtype)
+    if qk_norm:
+        p["qn"], a["qn"] = rmsnorm_init(head_dim, dtype)
+        p["kn"], a["kn"] = rmsnorm_init(head_dim, dtype)
+    return p, a
+
+
+def _project_qkv(p, xq, xkv, n_heads, n_kv, head_dim, *, positions_q,
+                 positions_kv, rope_theta, qk_norm, use_rope=True):
+    b, sq, _ = xq.shape
+    sk = xkv.shape[1]
+    q = dense(p["wq"], xq).reshape(b, sq, n_heads, head_dim)
+    k = dense(p["wk"], xkv).reshape(b, sk, n_kv, head_dim)
+    v = dense(p["wv"], xkv).reshape(b, sk, n_kv, head_dim)
+    if qk_norm:
+        q = rmsnorm(p["qn"], q)
+        k = rmsnorm(p["kn"], k)
+    if use_rope:
+        q = rope(q, positions_q, rope_theta)
+        k = rope(k, positions_kv, rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, *, scale, cap):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd), mask (B,1,1,Sq,Sk) or None."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) * scale
+    scores = softcap(scores, cap)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_flash(q, k, v, *, scale, cap, causal, window, chunk, unroll=False):
+    """Online-softmax attention over KV chunks: O(Sq*chunk) score memory
+    instead of O(Sq*Sk); the chunk scan body is rematerialized so the
+    backward pass stays chunked too (flash-attention structure)."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (sq, 1), 0)
+    nc = -(-sk // chunk)
+    pad = nc * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = jnp.moveaxis(k.reshape(b, nc, chunk, kv, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nc, chunk, kv, hd), 1, 0)
+    k0s = jnp.arange(nc, dtype=jnp.int32) * chunk
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kcb, vcb, k0 = xs
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg,
+                       kcb.astype(jnp.float32)) * scale
+        s = softcap(s, cap)
+        col = k0 + jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
+        ok = col < sk
+        if causal:
+            ok = ok & (col <= iq)
+        if window is not None:
+            ok = ok & (col > iq - window)
+        s = jnp.where(ok[None, None, None, :, :], s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p, vcb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    # Carry shardings must be pinned: loop-carried values default to
+    # replicated, which re-materializes the full (…, Sq) row state on every
+    # model shard (25 GB/device at prefill_32k before this constraint).
+    row = lambda t: lc(t, "batch", "heads", None, "seq_shard")
+    init = (row(jnp.full((b, kv, g, sq), NEG, jnp.float32)),
+            row(jnp.zeros((b, kv, g, sq), jnp.float32)),
+            lc(jnp.zeros((b, kv, g, sq, hd), jnp.float32),
+               "batch", "heads", None, "seq_shard", None))
+
+    def body_c(carry, xs):
+        (m, l, acc), ys = body(carry, xs)
+        return (row(m), row(l),
+                lc(acc, "batch", "heads", None, "seq_shard", None)), ys
+
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body_c), init,
+                                  (kc, vc, k0s),
+                                  unroll=nc if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, -2, 1)  # (b, sq, kv, g, hd)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+FLASH_THRESHOLD = 4096  # KV lengths above this use the chunked kernel
+
+
+def _dispatch_sdpa(q, k, v, *, scale, cap, causal, window, flash_chunk,
+                   unroll):
+    sq, sk = q.shape[1], k.shape[1]
+    if sk > FLASH_THRESHOLD:
+        return _sdpa_flash(q, k, v, scale=scale, cap=cap, causal=causal,
+                           window=window, chunk=flash_chunk, unroll=unroll)
+    iq = jnp.arange(sq)[:, None]
+    ik = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m &= ik <= iq
+    if window is not None:
+        m &= ik > iq - window
+    return _sdpa(q, k, v, m[None, None, None, :, :], scale=scale, cap=cap)
+
+
+def full_attention(p, x, *, n_heads, n_kv, head_dim, rope_theta,
+                   causal=True, window=None, cap=None, qk_norm=False,
+                   scale=None, x_kv=None, use_rope=True,
+                   return_kv=False, flash_chunk=1024, unroll=False):
+    """Train/prefill attention. x (B,S,D). Cross-attn when x_kv is given."""
+    b, s, _ = x.shape
+    xkv = x if x_kv is None else x_kv
+    sk = xkv.shape[1]
+    pos_q = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos_k = jnp.broadcast_to(jnp.arange(sk)[None], (b, sk))
+    q, k, v = _project_qkv(p, x, xkv, n_heads, n_kv, head_dim,
+                           positions_q=pos_q, positions_kv=pos_k,
+                           rope_theta=rope_theta, qk_norm=qk_norm,
+                           use_rope=use_rope and x_kv is None)
+    # v0: shard the query sequence; gather KV (see module docstring).
+    q = lc(q, "batch", "seq_shard", "heads", None)
+    k = lc(k, "batch", None, "heads", None)
+    v = lc(v, "batch", None, "heads", None)
+    scale = (head_dim ** -0.5) if scale is None else scale
+    out = _dispatch_sdpa(q, k, v, scale=scale, cap=cap,
+                         causal=causal and x_kv is None,
+                         window=window if x_kv is None else None,
+                         flash_chunk=flash_chunk, unroll=unroll)
+    out = lc(out, "batch", "seq_shard", "heads", None)
+    y = dense(p["wo"], out.reshape(b, s, n_heads * head_dim))
+    y = lc(y, "batch", None, "embed")
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def cache_len(max_len, window):
+    """Local-attention layers keep a rolling window-sized cache (serving
+    memory: a 1024-window gemma3 layer needs 1024 slots, not 32k)."""
+    return max_len if window is None else min(window, max_len)
+
+
+def init_cache(batch, max_len, n_kv, head_dim, dtype=jnp.float32,
+               window=None):
+    w = cache_len(max_len, window)
+    return {
+        "k": jnp.zeros((batch, w, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, w, n_kv, head_dim), dtype),
+    }
+
+
+def cache_axes():
+    return {"k": ("batch", "kv_seq", "heads", None),
+            "v": ("batch", "kv_seq", "heads", None)}
+
+
+def prefill_attention(p, x, *, n_heads, n_kv, head_dim, rope_theta,
+                      max_len, window=None, cap=None, qk_norm=False,
+                      scale=None, use_rope=True, flash_chunk=1024,
+                      unroll=False):
+    """Prefill: full (chunked) attention + cache filled to max_len (or the
+    rolling window for local layers: slot of abs position a is a % W)."""
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q, k, v = _project_qkv(p, x, x, n_heads, n_kv, head_dim,
+                           positions_q=pos, positions_kv=pos,
+                           rope_theta=rope_theta, qk_norm=qk_norm,
+                           use_rope=use_rope)
+    q = lc(q, "batch", "seq_shard", "heads", None)
+    scale_ = (head_dim ** -0.5) if scale is None else scale
+    out = _dispatch_sdpa(q, k, v, scale=scale_, cap=cap, causal=True,
+                         window=window, flash_chunk=flash_chunk,
+                         unroll=unroll)
+    y = dense(p["wo"], out.reshape(b, s, n_heads * head_dim))
+    w = cache_len(max_len, window)
+    if w < s:  # keep the last w keys at slots (abs % w)
+        slots = (jnp.arange(s - w, s) % w)
+        kw = jnp.zeros((b, w) + k.shape[2:], k.dtype).at[:, slots].set(
+            k[:, s - w:])
+        vw = jnp.zeros((b, w) + v.shape[2:], v.dtype).at[:, slots].set(
+            v[:, s - w:])
+        cache = {"k": kw, "v": vw}
+    else:
+        cache = init_cache(b, max_len, n_kv, head_dim, x.dtype, window)
+        cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
+        }
+    cache = {kk: lc(vv, "batch", "kv_seq", "heads", None)
+             for kk, vv in cache.items()}
+    return y, cache
+
+
+def decode_attention(p, x, cache, pos, *, n_heads, n_kv, head_dim,
+                     rope_theta, window=None, cap=None, qk_norm=False,
+                     scale=None, cross=False, use_rope=True,
+                     flash_chunk=None, unroll=False):
+    """One-token decode. x (B,1,D); cache KV seq sharded over `model`;
+    softmax over the sharded axis becomes small all-reduces under GSPMD.
+
+    Local layers use a rolling cache (slot = pos % W); keys are stored
+    already-rotated at absolute positions so RoPE needs no re-rotation.
+    cross=True: cache holds (already-projected) encoder KV; no update."""
+    b = x.shape[0]
+    clen = cache["k"].shape[1]
+    posb = jnp.broadcast_to(pos.reshape(-1, 1), (b, 1))
+    q, k_new, v_new = _project_qkv(
+        p, x, x, n_heads, n_kv, head_dim, positions_q=posb,
+        positions_kv=posb, rope_theta=rope_theta, qk_norm=qk_norm,
+        use_rope=use_rope and not cross)
+    windowed = window is not None and clen == window
+    slot = (pos % clen) if windowed else pos
+    if not cross:
+        cache = {
+            "k": lc(jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1),
+                "batch", "kv_seq", "heads", None),
+            "v": lc(jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1),
+                "batch", "kv_seq", "heads", None),
+        }
+    k, v = cache["k"], cache["v"]
+    ik = jnp.arange(clen)[None, :]
+    if cross:
+        m = jnp.ones((1, clen), bool)
+    elif windowed:
+        m = (ik <= pos)  # rolling buffer holds exactly the last W abs pos
+    else:
+        m = ik <= pos
+        if window is not None:
+            m &= ik > pos - window
+    mask = m[:, None, None, None, :]
+    scale_ = (head_dim ** -0.5) if scale is None else scale
+    out = _sdpa(q, k, v, mask, scale=scale_, cap=cap)
+    y = dense(p["wo"], out.reshape(b, 1, n_heads * head_dim))
+    return y, cache

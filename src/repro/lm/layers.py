@@ -1,0 +1,94 @@
+"""Base layers for the LM substrate: params are nested dicts; every init
+returns (params, logical-axes tree) so dist/logical.py can derive shardings
+without name-pattern guessing."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.logical import lc
+
+Array = jax.Array
+
+
+def dense_init(key, din, dout, axes=("embed_fsdp", "ff"), scale=None,
+               dtype=jnp.float32):
+    scale = (2.0 / (din + dout)) ** 0.5 if scale is None else scale
+    w = (jax.random.normal(key, (din, dout)) * scale).astype(dtype)
+    return {"w": w}, {"w": axes}
+
+
+def dense(p, x):
+    # Params may be f32 while activations run bf16: cast weights into the
+    # activation dtype so matmuls stay in compute precision.
+    return x @ p["w"].astype(x.dtype)
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}, {"g": None}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return out * p["g"].astype(x.dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    w = (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+    return {"w": w}, {"w": ("vocab", "embed_fsdp")}
+
+
+def rope(x: Array, positions: Array, theta: float):
+    """x (..., S, H, hd), positions (..., S) -> rotated x."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# --- MLP variants -----------------------------------------------------------
+
+def mlp_init(key, d, d_ff, kind, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        p, a = {}, {}
+        p["wi"], a["wi"] = dense_init(k1, d, d_ff, ("embed_fsdp", "ff"),
+                                      dtype=dtype)
+        p["wg"], a["wg"] = dense_init(k2, d, d_ff, ("embed_fsdp", "ff"),
+                                      dtype=dtype)
+        p["wo"], a["wo"] = dense_init(k3, d_ff, d, ("ff", "embed_fsdp"),
+                                      dtype=dtype)
+        return p, a
+    if kind == "relu2":
+        p, a = {}, {}
+        p["wi"], a["wi"] = dense_init(k1, d, d_ff, ("embed_fsdp", "ff"),
+                                      dtype=dtype)
+        p["wo"], a["wo"] = dense_init(k3, d_ff, d, ("ff", "embed_fsdp"),
+                                      dtype=dtype)
+        return p, a
+    raise ValueError(kind)
+
+
+def mlp(p, x, kind):
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x)
+    elif kind == "geglu":
+        h = jax.nn.gelu(dense(p["wg"], x), approximate=True) * dense(p["wi"], x)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(dense(p["wi"], x)))
+    else:
+        raise ValueError(kind)
+    h = lc(h, "batch", None, "ff")
+    return dense(p["wo"], h)

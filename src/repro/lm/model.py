@@ -1,0 +1,600 @@
+"""LM substrate assembly: pattern-based blocks under scan-over-layers.
+
+A model is ``reps`` repetitions of a block ``pattern`` (e.g. gemma3 =
+8 x (5 local + 1 global); xlstm = 6 x (7 mLSTM + 1 sLSTM)); layer params are
+stacked over reps and the layer stack runs under ``lax.scan`` (+remat), so
+HLO size is depth-independent — essential for the 40-cell dry-run matrix.
+"shared" pattern positions (zamba2's shared attention block) read weights
+from outside the scan (true cross-rep sharing); their *caches* stay per-rep.
+
+Decode caches are pytrees stacked over reps and threaded through the scan as
+xs/ys.  The LM head loss is vocab-sharded + sequence-chunked (never
+materializes (tokens, vocab) logits; DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.logical import lc
+from repro.lm import attention as attn
+from repro.lm import moe as moe_lib
+from repro.lm import ssm as ssm_lib
+from repro.lm import xlstm as xlstm_lib
+from repro.lm.layers import dense, embed_init, mlp, mlp_init, rmsnorm, \
+    rmsnorm_init, softcap
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEOpts:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    shared_ff: int = 0
+    router_act: str = "softmax"
+    capacity_factor: float = 1.25
+    dispatch: str = "global_sort"   # global_sort | grouped_a2a (§Perf)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    d_model: int
+    n_layers: int                       # decoder layers (== reps*len(pattern))
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    pattern: tuple = ("attn",)
+    rope_theta: float = 10_000.0
+    window: int | None = None           # for "local" blocks
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    qk_norm: bool = False
+    attn_scale: float | None = None
+    post_norm: bool = False             # gemma2 sandwich
+    mlp_kind: str = "swiglu"
+    moe: MoEOpts | None = None
+    ssm: ssm_lib.SSMConfig | None = None
+    xlstm: xlstm_lib.XLSTMConfig | None = None
+    encoder_layers: int = 0             # >0 => encoder-decoder
+    emb_scale: bool = False
+    tie_embeddings: bool = True
+    vocab_pad_to: int = 256
+    param_dtype: str = "float32"
+    dtype: str = "bfloat16"             # activation/compute dtype
+    frontend: str = "tokens"            # tokens | embeddings (audio stub)
+    long_context_ok: bool = False       # sub-quadratic: run long_500k
+    remat: bool = True
+    loss_chunk: int = 1024
+    # scan_layers=False unrolls the layer stack in Python — used by the
+    # dry-run's metric compiles (XLA cost analysis counts while-loop bodies
+    # once, so costs are fitted from unrolled 1-rep/2-rep compiles).
+    scan_layers: bool = True
+    flash_chunk: int = 1024             # KV-chunked attention block size
+    unroll_inner: bool = False          # unroll inner chunk scans (metrics)
+
+    @property
+    def hd(self):
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def reps(self):
+        assert self.n_layers % len(self.pattern) == 0, \
+            f"{self.name}: {self.n_layers} layers % pattern {len(self.pattern)}"
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def padded_vocab(self):
+        m = self.vocab_pad_to
+        return (self.vocab + m - 1) // m * m
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def attn_kwargs(self, kind):
+        return dict(n_heads=self.n_heads, n_kv=self.n_kv_heads,
+                    head_dim=self.hd, rope_theta=self.rope_theta,
+                    window=self.window
+                    if kind in ("local", "shared_attn") else None,
+                    cap=self.attn_softcap, qk_norm=self.qk_norm,
+                    scale=self.attn_scale, flash_chunk=self.flash_chunk,
+                    unroll=self.unroll_inner)
+
+
+ATTN_KINDS = ("attn", "local", "moe", "shared_attn", "xattn", "enc_attn")
+SHARED_KINDS = ("shared_attn",)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: LMConfig, kind: str):
+    d, dt = cfg.d_model, cfg.pdtype
+    p, a = {}, {}
+    keys = jax.random.split(key, 8)
+    p["ln1"], a["ln1"] = rmsnorm_init(d, dt)
+    if kind in ("attn", "local", "moe", "shared_attn", "enc_attn", "xattn"):
+        p["attn"], a["attn"] = attn.attn_init(
+            keys[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            qk_norm=cfg.qk_norm, dtype=dt)
+        p["ln2"], a["ln2"] = rmsnorm_init(d, dt)
+        if cfg.post_norm:
+            p["pn1"], a["pn1"] = rmsnorm_init(d, dt)
+            p["pn2"], a["pn2"] = rmsnorm_init(d, dt)
+        if kind == "xattn":
+            p["xattn"], a["xattn"] = attn.attn_init(
+                keys[1], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                qk_norm=False, dtype=dt)
+            p["lnx"], a["lnx"] = rmsnorm_init(d, dt)
+        if kind == "moe":
+            p["ffn"], a["ffn"] = moe_lib.moe_init(
+                keys[2], d, cfg.moe.d_ff_expert, cfg.moe.num_experts,
+                kind=cfg.mlp_kind, shared_ff=cfg.moe.shared_ff, dtype=dt)
+        else:
+            p["ffn"], a["ffn"] = mlp_init(keys[2], d, cfg.d_ff,
+                                          cfg.mlp_kind, dtype=dt)
+    elif kind == "mamba":
+        p["mix"], a["mix"] = ssm_lib.mamba2_init(keys[0], d, cfg.ssm, dt)
+    elif kind == "mlstm":
+        p["mix"], a["mix"] = xlstm_lib.mlstm_init(keys[0], d, cfg.xlstm, dt)
+    elif kind == "slstm":
+        p["mix"], a["mix"] = xlstm_lib.slstm_init(keys[0], d, cfg.xlstm, dt)
+    else:
+        raise ValueError(kind)
+    return p, a
+
+
+def _stack_init(key, cfg: LMConfig, pattern, reps):
+    """Stacked per-rep params for non-shared positions + single shared."""
+    scanned_p, scanned_a, shared_p, shared_a = {}, {}, {}, {}
+    for i, kind in enumerate(pattern):
+        name = f"b{i}_{kind}"
+        if kind in SHARED_KINDS:
+            shared_p[name], shared_a[name] = _block_init(
+                jax.random.fold_in(key, 1000 + i), cfg, kind)
+            continue
+
+        def one(k):
+            return _block_init(k, cfg, kind)[0]
+
+        ks = jax.random.split(jax.random.fold_in(key, i), reps)
+        scanned_p[name] = jax.vmap(one)(ks)
+        _, axes = _block_init(jax.random.fold_in(key, i), cfg, kind)
+        # Stacked params gain a leading "layers" dim; a None axes-leaf means
+        # fully replicated, which stays valid at any rank.
+        scanned_a[name] = jax.tree.map(
+            lambda ax: None if ax is None else ("layers",) + tuple(ax),
+            axes, is_leaf=_is_axes_leaf)
+    return scanned_p, scanned_a, shared_p, shared_a
+
+
+def _is_axes_leaf(x):
+    return x is None or (isinstance(x, tuple) and all(
+        y is None or isinstance(y, str) for y in x))
+
+
+def init(key, cfg: LMConfig):
+    """Returns (params, logical-axes tree)."""
+    p, a = {}, {}
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p["emb"], a["emb"] = embed_init(k1, cfg.padded_vocab, cfg.d_model,
+                                    cfg.pdtype)
+    p["scan"], a["scan"], p["shared"], a["shared"] = _stack_init(
+        k2, cfg, cfg.pattern, cfg.reps)
+    p["lnf"], a["lnf"] = rmsnorm_init(cfg.d_model, cfg.pdtype)
+    if not cfg.tie_embeddings:
+        p["head"], a["head"] = embed_init(k3, cfg.padded_vocab, cfg.d_model,
+                                          cfg.pdtype)
+    if cfg.encoder_layers:
+        enc_cfg = dataclasses.replace(cfg, pattern=("enc_attn",),
+                                      n_layers=cfg.encoder_layers)
+        (p["enc_scan"], a["enc_scan"], _, _) = _stack_init(
+            k4, enc_cfg, ("enc_attn",), cfg.encoder_layers)
+        p["enc_lnf"], a["enc_lnf"] = rmsnorm_init(cfg.d_model, cfg.pdtype)
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# forward blocks (full-sequence path)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(p, cfg: LMConfig, kind, x, enc_out=None):
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local", "moe", "shared_attn", "enc_attn", "xattn"):
+        h = rmsnorm(p["ln1"], x)
+        y = attn.full_attention(p["attn"], h, causal=kind != "enc_attn",
+                                **cfg.attn_kwargs(kind))
+        if cfg.post_norm:
+            y = rmsnorm(p["pn1"], y)
+        x = x + y
+        if kind == "xattn":
+            h = rmsnorm(p["lnx"], x)
+            y = attn.full_attention(p["xattn"], h, x_kv=enc_out,
+                                    causal=False, use_rope=False,
+                                    **cfg.attn_kwargs(kind))
+            x = x + y
+        h = rmsnorm(p["ln2"], x)
+        if kind == "moe":
+            y, mo = moe_lib.moe_apply(
+                p["ffn"], h, n_experts=cfg.moe.num_experts,
+                top_k=cfg.moe.top_k, kind=cfg.mlp_kind,
+                capacity_factor=cfg.moe.capacity_factor,
+                router_act=cfg.moe.router_act,
+                shared=cfg.moe.shared_ff > 0,
+                dispatch=cfg.moe.dispatch)
+            aux = aux + 0.01 * mo["aux_lb"] + 0.001 * mo["aux_z"]
+        else:
+            y = mlp(p["ffn"], h, cfg.mlp_kind)
+        if cfg.post_norm:
+            y = rmsnorm(p["pn2"], y)
+        x = x + y
+    elif kind == "mamba":
+        x = x + ssm_lib.mamba2_forward(p["mix"], rmsnorm(p["ln1"], x),
+                                       d=cfg.d_model, cfg=cfg.ssm)
+    elif kind == "mlstm":
+        x = x + xlstm_lib.mlstm_forward(p["mix"], rmsnorm(p["ln1"], x),
+                                        d=cfg.d_model, cfg=cfg.xlstm)
+    elif kind == "slstm":
+        x = x + xlstm_lib.slstm_forward(p["mix"], rmsnorm(p["ln1"], x),
+                                        d=cfg.d_model, cfg=cfg.xlstm)
+    else:
+        raise ValueError(kind)
+    return lc(x, "batch", None, "embed"), aux
+
+
+def _run_stack(params, cfg: LMConfig, x, pattern, scan_key="scan",
+               enc_out=None):
+    shared = params.get("shared", {})
+
+    def rep_body(carry, rep_params):
+        x, aux = carry
+        for i, kind in enumerate(pattern):
+            name = f"b{i}_{kind}"
+            p = shared[name] if kind in SHARED_KINDS else rep_params[name]
+            x, a = _block_fwd(p, cfg, kind, x, enc_out)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(rep_body) if cfg.remat else rep_body
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, carry, params[scan_key])
+    else:
+        reps = jax.tree.leaves(params[scan_key])[0].shape[0]
+        for r in range(reps):
+            rp = jax.tree.map(lambda t: t[r], params[scan_key])
+            carry, _ = body(carry, rp)
+        x, aux = carry
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: LMConfig, tokens):
+    x = params["emb"]["w"][tokens].astype(cfg.act_dtype)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.act_dtype)
+    return lc(x, "batch", None, "embed")
+
+
+def encode(params, cfg: LMConfig, frames):
+    """Encoder for enc-dec models; frames (B, S, D) from the frontend stub."""
+    x = lc(frames.astype(cfg.act_dtype), "batch", None, "embed")
+    x, _ = _run_stack(params, cfg, x, ("enc_attn",), scan_key="enc_scan")
+    return rmsnorm(params["enc_lnf"], x)
+
+
+def forward(params, cfg: LMConfig, tokens=None, frames=None, dec_tokens=None):
+    """Full-sequence forward -> (hidden (B,S,D), aux)."""
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(params, cfg, frames)
+        x = embed_tokens(params, cfg, dec_tokens)
+    elif cfg.frontend == "embeddings":
+        x = lc(frames.astype(cfg.act_dtype), "batch", None, "embed")
+    else:
+        x = embed_tokens(params, cfg, tokens)
+    x, aux = _run_stack(params, cfg, x, cfg.pattern, enc_out=enc_out)
+    return rmsnorm(params["lnf"], x), aux
+
+
+def logits_for(params, cfg: LMConfig, hidden):
+    """(B, T, D) -> (B, T, padded_vocab) — small T only (decode)."""
+    w = params["head" if not cfg.tie_embeddings else "emb"]["w"]
+    logits = hidden @ w.astype(hidden.dtype).T
+    logits = softcap(logits, cfg.final_softcap)
+    neg = jnp.asarray(-1e30, logits.dtype)
+    mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+    return jnp.where(mask, logits, neg)
+
+
+def lm_loss(params, cfg: LMConfig, hidden, targets, loss_mask=None):
+    """Sequence-chunked, vocab-sharded cross entropy (no (T,V) tensor)."""
+    b, s, d = hidden.shape
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0
+    nc = s // c
+    w = params["head" if not cfg.tie_embeddings else "emb"]["w"]
+    mask = (jnp.arange(cfg.padded_vocab) < cfg.vocab)
+    if loss_mask is None:
+        loss_mask = jnp.ones((b, s), bool)
+
+    hc = jnp.moveaxis(hidden.reshape(b, nc, c, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, nc, c), 1, 0)
+    mc = jnp.moveaxis(loss_mask.reshape(b, nc, c), 1, 0)
+
+    def chunk(carry, inp):
+        h, t, m = inp
+        logits = (h @ w.astype(h.dtype).T).astype(jnp.float32)
+        logits = softcap(logits, cfg.final_softcap)
+        logits = jnp.where(mask, logits, -1e30)
+        logits = lc(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = jnp.where(m, lse - ll, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, tc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode (cache pytrees stacked over reps)
+# ---------------------------------------------------------------------------
+
+def init_cache(params, cfg: LMConfig, batch, max_len, enc_len=None):
+    """Cache skeleton: dict per pattern position, stacked over reps."""
+    reps = cfg.reps
+    cache = {}
+    for i, kind in enumerate(cfg.pattern):
+        name = f"b{i}_{kind}"
+        if kind in ("attn", "local", "moe", "shared_attn"):
+            one = attn.init_cache(batch, max_len, cfg.n_kv_heads, cfg.hd,
+                                  cfg.act_dtype,
+                                  window=cfg.window if kind in
+                                  ("local", "shared_attn") else None)
+        elif kind == "xattn":
+            one = {
+                "self": attn.init_cache(batch, max_len, cfg.n_kv_heads,
+                                        cfg.hd, cfg.act_dtype),
+                "cross": attn.init_cache(batch, enc_len, cfg.n_kv_heads,
+                                         cfg.hd, cfg.act_dtype),
+            }
+        elif kind == "mamba":
+            one = ssm_lib.init_state(batch, cfg.d_model, cfg.ssm,
+                                     cfg.act_dtype)
+        elif kind == "mlstm":
+            one = xlstm_lib.mlstm_state(batch, cfg.d_model, cfg.xlstm)
+        elif kind == "slstm":
+            one = xlstm_lib.slstm_state(batch, cfg.d_model, cfg.xlstm)
+        else:
+            raise ValueError(kind)
+        cache[name] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (reps,) + x.shape), one)
+    return cache
+
+
+def cache_axes(cfg: LMConfig):
+    out = {}
+    for i, kind in enumerate(cfg.pattern):
+        name = f"b{i}_{kind}"
+        if kind in ("attn", "local", "moe", "shared_attn"):
+            one = attn.cache_axes()
+        elif kind == "xattn":
+            one = {"self": attn.cache_axes(), "cross": attn.cache_axes()}
+        elif kind == "mamba":
+            one = ssm_lib.state_axes()
+        elif kind == "mlstm":
+            one = xlstm_lib.mlstm_state_axes()
+        elif kind == "slstm":
+            one = xlstm_lib.slstm_state_axes()
+        out[name] = jax.tree.map(
+            lambda ax: ("layers",) + tuple(ax),
+            one, is_leaf=lambda x: isinstance(x, tuple) and all(
+                y is None or isinstance(y, str) for y in x))
+    return out
+
+
+def _block_decode(p, cfg: LMConfig, kind, x, cache, pos, enc_out=None):
+    if kind in ("attn", "local", "moe", "shared_attn"):
+        h = rmsnorm(p["ln1"], x)
+        y, cache = attn.decode_attention(p["attn"], h, cache, pos,
+                                         **cfg.attn_kwargs(kind))
+        if cfg.post_norm:
+            y = rmsnorm(p["pn1"], y)
+        x = x + y
+        h = rmsnorm(p["ln2"], x)
+        if kind == "moe":
+            y, _ = moe_lib.moe_apply(
+                p["ffn"], h, n_experts=cfg.moe.num_experts,
+                top_k=cfg.moe.top_k, kind=cfg.mlp_kind,
+                capacity_factor=cfg.moe.capacity_factor,
+                router_act=cfg.moe.router_act,
+                shared=cfg.moe.shared_ff > 0, no_drop=True)
+        else:
+            y = mlp(p["ffn"], h, cfg.mlp_kind)
+        if cfg.post_norm:
+            y = rmsnorm(p["pn2"], y)
+        x = x + y
+    elif kind == "xattn":
+        h = rmsnorm(p["ln1"], x)
+        y, new_self = attn.decode_attention(p["attn"], h, cache["self"],
+                                            pos, **cfg.attn_kwargs(kind))
+        x = x + y
+        h = rmsnorm(p["lnx"], x)
+        y, _ = attn.decode_attention(p["xattn"], h, cache["cross"], pos,
+                                     cross=True, use_rope=False,
+                                     **cfg.attn_kwargs(kind))
+        x = x + y
+        h = rmsnorm(p["ln2"], x)
+        x = x + mlp(p["ffn"], h, cfg.mlp_kind)
+        cache = {"self": new_self, "cross": cache["cross"]}
+    elif kind == "mamba":
+        y, cache = ssm_lib.mamba2_decode(p["mix"], rmsnorm(p["ln1"], x),
+                                         cache, d=cfg.d_model, cfg=cfg.ssm)
+        x = x + y
+    elif kind == "mlstm":
+        y, cache = xlstm_lib.mlstm_decode(p["mix"], rmsnorm(p["ln1"], x),
+                                          cache, d=cfg.d_model,
+                                          cfg=cfg.xlstm)
+        x = x + y
+    elif kind == "slstm":
+        y, cache = xlstm_lib.slstm_decode(p["mix"], rmsnorm(p["ln1"], x),
+                                          cache, d=cfg.d_model,
+                                          cfg=cfg.xlstm)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def decode_step(params, cfg: LMConfig, token, cache, pos):
+    """One decode step: token (B,1) (or (B,1,D) embeddings), position pos.
+    Returns (logits (B,1,V), new cache)."""
+    if cfg.frontend == "embeddings" and token.ndim == 3:
+        x = token.astype(cfg.act_dtype)
+    else:
+        x = embed_tokens(params, cfg, token)
+    shared = params.get("shared", {})
+
+    def rep_body(x, xs):
+        rep_params, rep_cache = xs
+        new_cache = {}
+        for i, kind in enumerate(cfg.pattern):
+            name = f"b{i}_{kind}"
+            p = shared[name] if kind in SHARED_KINDS else rep_params[name]
+            x, new_cache[name] = _block_decode(p, cfg, kind, x,
+                                               rep_cache[name], pos)
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(rep_body, x, (params["scan"], cache))
+    else:
+        reps = jax.tree.leaves(params["scan"])[0].shape[0]
+        caches = []
+        for r in range(reps):
+            xs_r = jax.tree.map(lambda t: t[r], (params["scan"], cache))
+            x, c = rep_body(x, xs_r)
+            caches.append(c)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    h = rmsnorm(params["lnf"], x)
+    return logits_for(params, cfg, h), new_cache
+
+
+def prefill(params, cfg: LMConfig, tokens=None, frames=None,
+            dec_tokens=None, max_len=None):
+    """Prefill: full forward that also fills the cache.
+
+    For simplicity and HLO-size parity we run the full-sequence path and
+    recompute per-layer KV into the cache via a second pass of projections
+    only where needed; attention caches are filled by re-running the stack
+    in cache-filling mode (scan ys).
+    """
+    b = (tokens if tokens is not None else frames).shape[0]
+    s = (dec_tokens if dec_tokens is not None else
+         tokens if tokens is not None else frames).shape[1]
+    max_len = max_len or s
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(params, cfg, frames)
+        x = embed_tokens(params, cfg, dec_tokens)
+    elif cfg.frontend == "embeddings":
+        x = lc(frames.astype(cfg.act_dtype), "batch", None, "embed")
+    else:
+        x = embed_tokens(params, cfg, tokens)
+
+    shared = params.get("shared", {})
+
+    def rep_body(x, rep_params):
+        caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            name = f"b{i}_{kind}"
+            p = shared[name] if kind in SHARED_KINDS else rep_params[name]
+            x, caches[name] = _block_prefill(p, cfg, kind, x, max_len,
+                                             enc_out)
+        return x, caches
+
+    body = jax.checkpoint(rep_body) if cfg.remat else rep_body
+    if cfg.scan_layers:
+        x, cache = jax.lax.scan(body, x, params["scan"])
+    else:
+        reps = jax.tree.leaves(params["scan"])[0].shape[0]
+        caches = []
+        for r in range(reps):
+            rp = jax.tree.map(lambda t: t[r], params["scan"])
+            x, c = body(x, rp)
+            caches.append(c)
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    h = rmsnorm(params["lnf"], x)
+    last = logits_for(params, cfg, h[:, -1:, :])
+    return last, cache
+
+
+def _block_prefill(p, cfg: LMConfig, kind, x, max_len, enc_out=None):
+    if kind in ("attn", "local", "moe", "shared_attn"):
+        h = rmsnorm(p["ln1"], x)
+        y, kv = attn.prefill_attention(p["attn"], h, max_len=max_len,
+                                       **cfg.attn_kwargs(kind))
+        if cfg.post_norm:
+            y = rmsnorm(p["pn1"], y)
+        x = x + y
+        h = rmsnorm(p["ln2"], x)
+        if kind == "moe":
+            y, _ = moe_lib.moe_apply(
+                p["ffn"], h, n_experts=cfg.moe.num_experts,
+                top_k=cfg.moe.top_k, kind=cfg.mlp_kind,
+                capacity_factor=cfg.moe.capacity_factor,
+                router_act=cfg.moe.router_act,
+                shared=cfg.moe.shared_ff > 0,
+                dispatch=cfg.moe.dispatch)
+        else:
+            y = mlp(p["ffn"], h, cfg.mlp_kind)
+        if cfg.post_norm:
+            y = rmsnorm(p["pn2"], y)
+        return x + y, kv
+    if kind == "xattn":
+        h = rmsnorm(p["ln1"], x)
+        y, kv = attn.prefill_attention(p["attn"], h, max_len=max_len,
+                                       **cfg.attn_kwargs(kind))
+        x = x + y
+        h = rmsnorm(p["lnx"], x)
+        y, xkv = attn.full_attention(p["xattn"], h, x_kv=enc_out,
+                                     causal=False, use_rope=False,
+                                     return_kv=True, **cfg.attn_kwargs(kind))
+        x = x + y
+        h = rmsnorm(p["ln2"], x)
+        x = x + mlp(p["ffn"], h, cfg.mlp_kind)
+        return x, {"self": kv, "cross": {"k": xkv[0], "v": xkv[1]}}
+    if kind == "mamba":
+        y, st = ssm_lib.mamba2_forward(p["mix"], rmsnorm(p["ln1"], x),
+                                       d=cfg.d_model, cfg=cfg.ssm,
+                                       return_state=True)
+        return x + y, st
+    if kind == "mlstm":
+        y, st = xlstm_lib.mlstm_forward(p["mix"], rmsnorm(p["ln1"], x),
+                                        d=cfg.d_model, cfg=cfg.xlstm,
+                                        return_state=True)
+        return x + y, st
+    if kind == "slstm":
+        y, st = xlstm_lib.slstm_forward(p["mix"], rmsnorm(p["ln1"], x),
+                                        d=cfg.d_model, cfg=cfg.xlstm,
+                                        return_state=True)
+        return x + y, st
+    raise ValueError(kind)

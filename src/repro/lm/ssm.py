@@ -1,0 +1,196 @@
+"""Mamba2 (SSD) block — chunked parallel train/prefill, recurrent decode.
+
+Chunkwise state-space duality: within a chunk (length L) the output is an
+attention-like masked product; across chunks a small scan carries the
+(H, P, N) state.  The (L, L) decay matrices are materialized per head like
+the reference implementation; heads are sharded over the ``model`` axis
+(``ssm_heads`` logical axis) so the per-device footprint stays bounded.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.logical import lc
+from repro.lm.layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    expand: int = 2
+    headdim: int = 64
+    conv_kernel: int = 4
+    chunk: int = 128
+
+    def d_inner(self, d):
+        return self.expand * d
+
+    def n_heads(self, d):
+        return self.d_inner(d) // self.headdim
+
+
+def mamba2_init(key, d, cfg: SSMConfig, dtype=jnp.float32):
+    di = cfg.d_inner(d)
+    h = cfg.n_heads(d)
+    n = cfg.d_state
+    conv_dim = di + 2 * n
+    keys = jax.random.split(key, 6)
+    p, a = {}, {}
+    # in_proj -> [z(di), x(di), B(n), C(n), dt(h)]
+    p["in"], a["in"] = dense_init(keys[0], d, 2 * di + 2 * n + h,
+                                  ("embed_fsdp", "ff"), dtype=dtype)
+    p["conv_w"] = (jax.random.normal(keys[1], (cfg.conv_kernel, conv_dim))
+                   * 0.1).astype(dtype)
+    a["conv_w"] = (None, "ff")
+    p["conv_b"] = jnp.zeros((conv_dim,), dtype)
+    a["conv_b"] = ("ff",)
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype)
+    a["A_log"] = ("ssm_heads",)
+    dt0 = jnp.exp(jax.random.uniform(keys[2], (h,))
+                  * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    p["dt_bias"] = (dt0 + jnp.log(-jnp.expm1(-dt0))).astype(dtype)
+    a["dt_bias"] = ("ssm_heads",)
+    p["D"] = jnp.ones((h,), dtype)
+    a["D"] = ("ssm_heads",)
+    p["norm"], a["norm"] = rmsnorm_init(di, dtype)
+    p["out"], a["out"] = dense_init(keys[3], di, d, ("ff", "embed_fsdp"),
+                                    dtype=dtype)
+    return p, a
+
+
+def _split_proj(p, x, d, cfg: SSMConfig):
+    di = cfg.d_inner(d)
+    h = cfg.n_heads(d)
+    n = cfg.d_state
+    zxbcdt = dense(p["in"], x)
+    z = zxbcdt[..., :di]
+    xin = zxbcdt[..., di:2 * di]
+    bm = zxbcdt[..., 2 * di:2 * di + n]
+    cm = zxbcdt[..., 2 * di + n:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xin, bm, cm, dt
+
+
+def _conv_full(p, u, k):
+    """Causal depthwise conv over (B, S, C)."""
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * p["conv_w"][i]
+              for i in range(k))
+    return out + p["conv_b"]
+
+
+def mamba2_forward(p, x, *, d, cfg: SSMConfig, return_state=False):
+    """x (B, S, D) -> y (B, S, D) [, state for decode continuation]."""
+    b, s, _ = x.shape
+    di, h, n, L = cfg.d_inner(d), cfg.n_heads(d), cfg.d_state, cfg.chunk
+    ph = cfg.headdim
+    z, xin, bm, cm, dt = _split_proj(p, x, d, cfg)
+    conv_in = jnp.concatenate([xin, bm, cm], -1)
+    conv_out = jax.nn.silu(_conv_full(p, conv_in, cfg.conv_kernel))
+    xin = conv_out[..., :di]
+    bm = conv_out[..., di:di + n]
+    cm = conv_out[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,)
+    la = dt * A                                                  # log-decay
+
+    # Pad to a chunk multiple; padded steps are identity (a=1, dt=0) so the
+    # carried state and real outputs are unaffected.
+    pad = (-s) % L
+    if pad:
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // L
+    xh = xin.reshape(b, nc, L, h, ph)
+    xh = lc(xh, "batch", None, None, "ssm_heads", None)
+    dtc = dt.reshape(b, nc, L, h)
+    lac = jnp.cumsum(la.reshape(b, nc, L, h), axis=2)            # (B,nc,L,H)
+    bmc = bm.reshape(b, nc, L, n).astype(jnp.float32)
+    cmc = cm.reshape(b, nc, L, n).astype(jnp.float32)
+
+    # Intra-chunk (attention-like, causal):
+    cb = jnp.einsum("bcln,bcsn->bcls", cmc, bmc)                 # (B,nc,L,L)
+    decay = jnp.exp(lac[:, :, :, None, :] - lac[:, :, None, :, :])
+    causal = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+    m = jnp.where(causal, cb[..., None] * decay, 0.0)            # (B,nc,L,L,H)
+    m = m * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", m, xh.astype(jnp.float32))
+
+    # Chunk states + inter-chunk scan:
+    dec_out = jnp.exp(lac[:, :, -1:, :] - lac)                   # (B,nc,L,H)
+    sloc = jnp.einsum("bclh,bcln,bclhp->bchnp",
+                      dec_out * dtc, bmc, xh.astype(jnp.float32))
+    chunk_decay = jnp.exp(lac[:, :, -1, :])                      # (B,nc,H)
+
+    def scanner(carry, inp):
+        s_loc, cd = inp
+        new = carry * cd[:, :, None, None] + s_loc
+        return new, carry
+
+    init = jnp.zeros((b, h, n, ph), jnp.float32)
+    final, s_prev = jax.lax.scan(
+        scanner, init,
+        (jnp.moveaxis(sloc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_prev = jnp.moveaxis(s_prev, 0, 1)                          # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bcln,bclh,bchnp->bclhp",
+                         cmc, jnp.exp(lac), s_prev)
+
+    y = (y_intra + y_inter).reshape(b, sp, h, ph)[:, :s]
+    y = y + xin[:, :s].reshape(b, s, h, ph).astype(jnp.float32) * \
+        p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = dense(p["out"], y)
+    if not return_state:
+        return out
+    conv_tail = jnp.swapaxes(conv_in[:, -(cfg.conv_kernel - 1):, :], 1, 2)
+    return out, {"ssd": final, "conv": conv_tail,
+                 }
+
+
+def init_state(batch, d, cfg: SSMConfig, dtype=jnp.float32):
+    di, h, n = cfg.d_inner(d), cfg.n_heads(d), cfg.d_state
+    return {
+        "ssd": jnp.zeros((batch, h, n, cfg.headdim), jnp.float32),
+        "conv": jnp.zeros((batch, di + 2 * n, cfg.conv_kernel - 1), dtype),
+    }
+
+
+def state_axes():
+    return {"ssd": ("batch", "ssm_heads", None, None),
+            "conv": ("batch", "ff", None)}
+
+
+def mamba2_decode(p, x, state, *, d, cfg: SSMConfig):
+    """One-token step. x (B, 1, D)."""
+    b = x.shape[0]
+    di, h, n, ph = cfg.d_inner(d), cfg.n_heads(d), cfg.d_state, cfg.headdim
+    z, xin, bm, cm, dt = _split_proj(p, x, d, cfg)
+    u = jnp.concatenate([xin, bm, cm], -1)[:, 0, :]              # (B, convdim)
+    hist = jnp.concatenate([state["conv"],
+                            u[:, :, None].astype(state["conv"].dtype)], -1)
+    conv = jnp.einsum("bck,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    xin = conv[:, :di].reshape(b, h, ph).astype(jnp.float32)
+    bmv = conv[:, di:di + n].astype(jnp.float32)
+    cmv = conv[:, di + n:].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dtv * A)                                         # (B,H)
+    ssd = state["ssd"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dtv, bmv, xin)
+    y = jnp.einsum("bn,bhnp->bhp", cmv, ssd)
+    y = y + xin * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = dense(p["out"], y)
+    return out, {"ssd": ssd, "conv": hist[:, :, 1:]}

@@ -1,0 +1,279 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel train, recurrent
+decode) and sLSTM (scalar memory with block-diagonal recurrence, scanned).
+
+The mLSTM chunkwise form is flash-attention-style: within a chunk the
+exp-input-gate/sigmoid-forget-gate products are evaluated in log space with
+a per-row running stabilizer; across chunks a scan carries (C, n, m) per
+head.  Structurally faithful simplifications vs the reference blocks are
+listed in DESIGN.md §5 (xlstm row).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.logical import lc
+from repro.lm.layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+NEGINF = -1.0e30
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    n_heads: int = 4
+    proj_factor: float = 2.0     # mLSTM up-projection
+    slstm_ff: float = 4.0 / 3.0  # sLSTM post-FFN
+    chunk: int = 64
+    unroll: bool = False         # unroll the chunk scan (metric compiles)
+
+    def d_inner(self, d):
+        return int(self.proj_factor * d)
+
+
+# --- mLSTM -------------------------------------------------------------------
+
+def mlstm_init(key, d, cfg: XLSTMConfig, dtype=jnp.float32):
+    di = cfg.d_inner(d)
+    keys = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["up"], a["up"] = dense_init(keys[0], d, 2 * di, ("embed_fsdp", "ff"),
+                                  dtype=dtype)
+    for i, nm in enumerate(("wq", "wk", "wv")):
+        p[nm], a[nm] = dense_init(keys[1 + i], di, di, ("ff", None),
+                                  dtype=dtype)
+    p["wif"], a["wif"] = dense_init(keys[4], di, 2 * cfg.n_heads,
+                                    ("ff", None), dtype=dtype)
+    p["if_b"] = jnp.concatenate([
+        jnp.zeros((cfg.n_heads,)),            # input gate bias
+        jnp.linspace(3.0, 6.0, cfg.n_heads),  # forget gate bias (open)
+    ]).astype(dtype)
+    a["if_b"] = (None,)
+    p["norm"], a["norm"] = rmsnorm_init(di, dtype)
+    p["down"], a["down"] = dense_init(keys[5], di, d, ("ff", "embed_fsdp"),
+                                      dtype=dtype)
+    return p, a
+
+
+def _mlstm_gates(p, h, nh):
+    pre = dense(p["wif"], h) + p["if_b"]
+    li = pre[..., :nh].astype(jnp.float32)                   # log input gate
+    lf = jax.nn.log_sigmoid(pre[..., nh:].astype(jnp.float32))
+    return li, lf
+
+
+def mlstm_forward(p, x, *, d, cfg: XLSTMConfig, return_state=False):
+    b, s, _ = x.shape
+    di, nh, L = cfg.d_inner(d), cfg.n_heads, cfg.chunk
+    hd = di // nh
+    up = dense(p["up"], x)
+    hin, gate = up[..., :di], up[..., di:]
+    q = dense(p["wq"], hin).reshape(b, s, nh, hd) * hd ** -0.5
+    k = dense(p["wk"], hin).reshape(b, s, nh, hd) * hd ** -0.5
+    v = dense(p["wv"], hin).reshape(b, s, nh, hd)
+    li, lf = _mlstm_gates(p, hin, nh)                        # (B,S,H)
+
+    # Pad to a chunk multiple; padded steps are identity (f=1, i=0).
+    pad = (-s) % L
+    if pad:
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) *
+                                 (t.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        lf = zpad(lf)
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=NEGINF)
+    sp = s + pad
+    nc = sp // L
+    shp = lambda t: t.reshape(b, nc, L, *t.shape[2:])
+    q, k, v = shp(q), shp(k), shp(v)
+    q = lc(q, "batch", None, None, "heads", None)
+    li, lf = shp(li), shp(lf)
+    lfc = jnp.cumsum(lf, axis=2)                             # (B,nc,L,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+
+    # cross-chunk carried state: C (B,H,dk,dv), n (B,H,dk), m (B,H).
+    # Intra-chunk (L,L,H) score tensors are built INSIDE the scan body —
+    # hoisting them materializes (B,nc,L,L,H) for every chunk at once
+    # (42 GB/device at train_4k).
+    def scanner(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, lic, lfcc = inp
+        scc = (lfcc[:, :, None, :] - lfcc[:, None, :, :]
+               + lic[:, None, :, :])                         # (B,L,L,H)
+        scc = jnp.where(causal, scc, NEGINF)
+        mloc = jnp.max(scc, axis=2)                          # (B,L,H)
+        qkc = jnp.einsum("blhd,bshd->blsh", qc.astype(jnp.float32),
+                         kc.astype(jnp.float32))
+        # inter log-decay for queries: lfc_t + m_prev
+        b_inter = lfcc + m[:, None, :]                       # (B,L,H)
+        mrow = jnp.maximum(mloc, b_inter)
+        w_intra = jnp.exp(scc - mrow[:, :, None, :]) * qkc   # (B,L,L,H)
+        y_num = jnp.einsum("blsh,bshd->blhd", w_intra,
+                           vc.astype(jnp.float32))
+        y_den = jnp.sum(w_intra, axis=2)                     # (B,L,H)
+        w_inter = jnp.exp(b_inter - mrow)                    # (B,L,H)
+        y_num += w_inter[..., None] * jnp.einsum(
+            "blhk,bhkv->blhv", qc.astype(jnp.float32), C)
+        y_den += w_inter * jnp.einsum(
+            "blhk,bhk->blh", qc.astype(jnp.float32), n)
+        denom = jnp.maximum(jnp.abs(y_den), jnp.exp(-mrow)) + 1e-6
+        y = y_num / denom[..., None]
+        # state update to end of chunk
+        lfl = lfcc[:, -1, :]                                 # (B,H)
+        dec_k = lfl[:, None, :] - lfcc + lic                 # (B,L,H)
+        m_new = jnp.maximum(lfl + m, jnp.max(dec_k, axis=1))
+        wk = jnp.exp(dec_k - m_new[:, None, :])
+        C_new = (jnp.exp(lfl + m - m_new)[:, :, None, None] * C
+                 + jnp.einsum("blh,blhk,blhv->bhkv", wk,
+                              kc.astype(jnp.float32),
+                              vc.astype(jnp.float32)))
+        n_new = (jnp.exp(lfl + m - m_new)[:, :, None] * n
+                 + jnp.einsum("blh,blhk->bhk", wk, kc.astype(jnp.float32)))
+        return (C_new, n_new, m_new), y
+
+    init = (jnp.zeros((b, nh, hd, hd), jnp.float32),
+            jnp.zeros((b, nh, hd), jnp.float32),
+            jnp.full((b, nh), -1e30, jnp.float32))
+    mv = lambda t: jnp.moveaxis(t, 1, 0)
+    (Cf, nf, mf), ys = jax.lax.scan(
+        jax.checkpoint(scanner), init,
+        (mv(q), mv(k), mv(v), mv(li), mv(lfc)),
+        unroll=nc if cfg.unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, sp, di)[:, :s].astype(x.dtype)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(gate)
+    out = dense(p["down"], y)
+    if return_state:
+        return out, {"C": Cf, "n": nf, "m": mf}
+    return out
+
+
+def mlstm_state(batch, d, cfg: XLSTMConfig):
+    nh = cfg.n_heads
+    hd = cfg.d_inner(d) // nh
+    return {"C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, nh, hd), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+def mlstm_state_axes():
+    return {"C": ("batch", "heads", None, None),
+            "n": ("batch", "heads", None), "m": ("batch", "heads")}
+
+
+def mlstm_decode(p, x, state, *, d, cfg: XLSTMConfig):
+    b = x.shape[0]
+    di, nh = cfg.d_inner(d), cfg.n_heads
+    hd = di // nh
+    up = dense(p["up"], x)
+    hin, gate = up[..., :di], up[..., di:]
+    q = dense(p["wq"], hin).reshape(b, nh, hd).astype(jnp.float32) * hd ** -0.5
+    k = dense(p["wk"], hin).reshape(b, nh, hd).astype(jnp.float32) * hd ** -0.5
+    v = dense(p["wv"], hin).reshape(b, nh, hd).astype(jnp.float32)
+    li, lf = _mlstm_gates(p, hin, nh)
+    li, lf = li[:, 0], lf[:, 0]                               # (B,H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    C = fw[:, :, None, None] * C + iw[:, :, None, None] * \
+        jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = fw[:, :, None] * n + iw[:, :, None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)),
+                      jnp.exp(-m_new)) + 1e-6
+    y = (num / den[..., None]).reshape(b, 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(gate)
+    return dense(p["down"], y), {"C": C, "n": n, "m": m_new}
+
+
+# --- sLSTM -------------------------------------------------------------------
+
+def slstm_init(key, d, cfg: XLSTMConfig, dtype=jnp.float32):
+    nh = cfg.n_heads
+    hd = d // nh
+    dff = int(cfg.slstm_ff * d)
+    keys = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["wx"], a["wx"] = dense_init(keys[0], d, 4 * d, ("embed_fsdp", "ff"),
+                                  dtype=dtype)
+    p["r"] = (jax.random.normal(keys[1], (nh, hd, 4 * hd)) /
+              jnp.sqrt(hd)).astype(dtype)
+    a["r"] = ("heads", None, None)
+    p["b"] = jnp.concatenate([
+        jnp.zeros((2 * d,)), jnp.linspace(3.0, 6.0, d), jnp.zeros((d,)),
+    ]).astype(dtype)
+    a["b"] = (None,)
+    p["norm"], a["norm"] = rmsnorm_init(d, dtype)
+    p["ff_i"], a["ff_i"] = dense_init(keys[2], d, dff, ("embed_fsdp", "ff"),
+                                      dtype=dtype)
+    p["ff_o"], a["ff_o"] = dense_init(keys[3], dff, d, ("ff", "embed_fsdp"),
+                                      dtype=dtype)
+    return p, a
+
+
+def _slstm_cell(p, xt, state, nh, hd):
+    """xt (B, 4d) preactivations from W x; state dict of (B,H,hd)."""
+    c, n, hprev, m = state["c"], state["n"], state["h"], state["m"]
+    b = xt.shape[0]
+    rec = jnp.einsum("bhk,hkj->bhj", hprev, p["r"])          # (B,H,4hd)
+    d = nh * hd
+    pre = xt.reshape(b, nh, 4 * hd) + rec + p["b"].reshape(nh * 4, hd) \
+        .reshape(4, nh, hd).transpose(1, 0, 2).reshape(nh, 4 * hd)
+    z = jnp.tanh(pre[..., :hd].astype(jnp.float32))
+    li = pre[..., hd:2 * hd].astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(pre[..., 2 * hd:3 * hd].astype(jnp.float32))
+    o = jax.nn.sigmoid(pre[..., 3 * hd:].astype(jnp.float32))
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    c = fw * c + iw * z
+    n = fw * n + iw
+    h = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+
+def slstm_forward(p, x, *, d, cfg: XLSTMConfig, return_state=False):
+    b, s, _ = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    xs = dense(p["wx"], x)                                   # (B,S,4d)
+    state = slstm_state(b, d, cfg)
+
+    def step(st, xt):
+        st, h = _slstm_cell(p, xt, st, nh, hd)
+        return st, h
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(xs, 0, 1))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = rmsnorm(p["norm"], y)
+    y = dense(p["ff_o"], jax.nn.gelu(dense(p["ff_i"], y), approximate=True))
+    if return_state:
+        return y, state
+    return y
+
+
+def slstm_state(batch, d, cfg: XLSTMConfig):
+    nh = cfg.n_heads
+    hd = d // nh
+    z = lambda: jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, nh, hd), -1e30, jnp.float32)}
+
+
+def slstm_state_axes():
+    ax = ("batch", "heads", None)
+    return {"c": ax, "n": ax, "h": ax, "m": ax}
+
+
+def slstm_decode(p, x, state, *, d, cfg: XLSTMConfig):
+    b = x.shape[0]
+    nh = cfg.n_heads
+    hd = d // nh
+    xt = dense(p["wx"], x)[:, 0, :]
+    state, h = _slstm_cell(p, xt, state, nh, hd)
+    y = h.reshape(b, 1, d).astype(x.dtype)
+    y = rmsnorm(p["norm"], y)
+    y = dense(p["ff_o"], jax.nn.gelu(dense(p["ff_i"], y), approximate=True))
+    return y, state

@@ -1,0 +1,151 @@
+"""Step-scoped, async, reshardable checkpointing.
+
+Arrays are saved with their *logical* (unsharded) shapes keyed by tree
+paths, so a checkpoint written on any mesh restores onto any other mesh
+(elastic scaling): restore takes target shardings and device_puts shard-
+by-shard.  Writes go to a tmp dir + atomic rename; a manifest records the
+step and data-pipeline cursor, and ``latest_step`` drives crash-restart.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p):
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None,
+         keep: int = 3):
+    """Synchronous save (see AsyncCheckpointer for the async wrapper)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp-{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+
+    def to_np(v):
+        a = np.asarray(v)
+        # npz cannot round-trip ml_dtypes (bf16 etc.); store as f32
+        # (lossless for bf16) and let restore cast back.
+        if a.dtype.kind not in "fiub?" or a.dtype.itemsize == 0:
+            a = a.astype(np.float32)
+        return a
+
+    arrays = {k: to_np(v) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {"step": step, "time": time.time(), "extra": extra or {},
+                "keys": sorted(arrays)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir, keep):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str):
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree``; optionally device_put
+    with new shardings (mesh-independent resharding)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        flat = {k: data[k] for k in data.files}
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like_tree)[0]
+    out_leaves = []
+    for p, like in leaves_paths:
+        key = _SEP.join(_path_str(x) for x in p)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != {like.shape}")
+        out_leaves.append(np.asarray(jax.numpy.asarray(arr, like.dtype)))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like_tree), out_leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, sh: jax.device_put(x, sh), tree, shardings)
+    return tree, manifest
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a background thread (training never blocks
+    on disk); ``wait()`` drains before exit.  Arrays are fetched to host
+    before handing off, so the step's buffers cannot be mutated under us."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread = None
+        self.last_saved = None
+
+    def save(self, step: int, tree, extra=None):
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._run, args=(step, host_tree, extra), daemon=True)
+        self._thread.start()
+
+    def _run(self, step, tree, extra):
+        save(self.ckpt_dir, step, tree, extra, keep=self.keep)
+        self.last_saved = step
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,93 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler monitoring,
+resumable data, optional gradient compression with error feedback."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import compression
+from repro.train import checkpoint as ckpt_lib
+from repro.train import optimizer as opt_lib
+from repro.train.monitor import StepMonitor
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep: int = 3
+    grad_compression: str = "none"   # none | bf16 | int8
+    seed: int = 0
+
+
+def run(loop_cfg: LoopConfig, *, init_params: Callable,
+        train_step: Callable, next_batch: Callable, opt_cfg=None,
+        params=None, log: Callable = print, fail_at: int | None = None):
+    """Generic loop: restores the latest checkpoint if present, trains to
+    total_steps, checkpoints asynchronously, records stragglers.
+
+    ``fail_at`` injects a crash (fault-tolerance tests).
+    Returns (params, opt_state, history).
+    """
+    opt_cfg = opt_cfg or opt_lib.OptConfig(total_steps=loop_cfg.total_steps)
+    if params is None:
+        params = init_params()
+    opt_state = opt_lib.init(params)
+    start_step = 0
+    saver = ckpt_lib.AsyncCheckpointer(loop_cfg.ckpt_dir, loop_cfg.keep) \
+        if loop_cfg.ckpt_dir else None
+    residual = (compression.init_residual(params)
+                if loop_cfg.grad_compression != "none" else None)
+
+    if saver and (last := ckpt_lib.latest_step(loop_cfg.ckpt_dir)) is not None:
+        state = {"params": params, "opt": opt_state}
+        state, manifest = ckpt_lib.restore(loop_cfg.ckpt_dir, last, state)
+        params, opt_state = state["params"], state["opt"]
+        start_step = manifest["extra"].get("next_step", last)
+        log(f"[loop] restored step {last}, resuming at {start_step}")
+
+    monitor = StepMonitor()
+    history = []
+    for step in range(start_step, loop_cfg.total_steps):
+        if fail_at is not None and step == fail_at:
+            saver and saver.wait()
+            raise RuntimeError(f"injected failure at step {step}")
+        batch = next_batch(step)
+        t0 = time.time()
+        if residual is not None:
+            # grad-compression path: train_step returns grads for EF wrap
+            grads, metrics = train_step(params, opt_state, batch,
+                                        return_grads=True)
+            grads, residual = compression.apply_error_feedback(
+                grads, residual, loop_cfg.grad_compression,
+                jax.random.fold_in(jax.random.PRNGKey(loop_cfg.seed), step))
+            params, opt_state, om = opt_lib.update(opt_cfg, grads,
+                                                   opt_state, params)
+            metrics = {**metrics, **om}
+        else:
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.time() - t0
+        straggler = monitor.record(step, dt)
+        history.append({"step": step, "dt": dt,
+                        "loss": float(metrics["loss"]),
+                        "straggler": straggler})
+        if step % loop_cfg.log_every == 0:
+            log(f"[loop] step {step} loss {float(metrics['loss']):.4f} "
+                f"({dt*1e3:.0f} ms{' STRAGGLER' if straggler else ''})")
+        if saver and step and step % loop_cfg.ckpt_every == 0:
+            saver.save(step, {"params": params, "opt": opt_state},
+                       extra={"next_step": step + 1})
+    if saver:
+        saver.save(loop_cfg.total_steps,
+                   {"params": params, "opt": opt_state},
+                   extra={"next_step": loop_cfg.total_steps})
+        saver.wait()
+    return params, opt_state, {"history": history,
+                               "monitor": monitor.summary()}

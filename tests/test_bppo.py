@@ -1,0 +1,214 @@
+"""Tests for Block-Parallel Point Operations vs the global oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+from repro.core import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def cloud(seed, n=1024):
+    rng = np.random.default_rng(seed)
+    k = 4
+    pts = np.concatenate([
+        rng.normal(rng.uniform(-2, 2, 3), rng.uniform(0.2, 0.5), (n // k, 3))
+        for _ in range(k)
+    ]).astype(np.float32)
+    return jnp.asarray(pts[:n])
+
+
+TH = 64
+
+
+def pipeline(pts, rate=0.25, radius=0.25, num=16):
+    n = pts.shape[0]
+
+    @jax.jit
+    def run(p):
+        part = core.partition(p, th=TH)
+        samp = core.blockwise_fps(part, rate=rate, k_out=int(n * rate),
+                                  bs=TH)
+        nb = core.blockwise_ball_query(part, samp, radius=radius, num=num,
+                                       w=2 * TH)
+        return part, samp, nb
+
+    return run(pts)
+
+
+class TestBlockwiseFPS:
+    def test_samples_are_distinct_valid_points(self):
+        pts = cloud(0)
+        part, samp, _ = pipeline(pts)
+        sidx = np.asarray(samp.idx)
+        sval = np.asarray(samp.valid)
+        assert len(np.unique(sidx[sval])) == sval.sum()
+        assert np.asarray(part.valid)[sidx[sval]].all()
+
+    def test_fixed_rate_quota(self):
+        # Paper: one fixed rate across all blocks, no extra hyper-params.
+        pts = cloud(1)
+        part, samp, _ = pipeline(pts, rate=0.25)
+        q = np.asarray(samp.quota)
+        v = np.asarray(part.leaf_vsize)
+        isl = np.asarray(part.is_leaf)
+        np.testing.assert_array_equal(
+            q[isl], np.minimum(np.round(0.25 * v[isl]), samp.local_idx.shape[1]))
+
+    def test_per_block_counts_aggregate(self):
+        pts = cloud(2)
+        part, samp, _ = pipeline(pts)
+        assert int(samp.total) == int(np.asarray(samp.quota).sum())
+        assert int(samp.valid.sum()) == min(int(samp.total), samp.k_out)
+
+    def test_coverage_beats_random_and_tracks_global(self):
+        """FPS-ness proxy for the paper's <0.2% accuracy claim: block-wise
+        sample coverage must be far closer to global FPS than to random."""
+        pts = cloud(3, n=2048)
+        pts_np = np.asarray(pts)
+        part, samp, _ = pipeline(pts, rate=0.25)
+        sel = np.asarray(part.coords)[np.asarray(samp.idx)[np.asarray(samp.valid)]]
+
+        def mean_cov(s):
+            d = ((pts_np[:, None, :] - s[None, :, :]) ** 2).sum(-1)
+            return float(np.sqrt(d.min(1)).mean())
+
+        gi, _ = ref.fps(pts, jnp.ones(len(pts_np), bool), len(sel))
+        rng = np.random.default_rng(0)
+        cov_g = mean_cov(pts_np[np.asarray(gi)])
+        cov_b = mean_cov(sel)
+        cov_r = mean_cov(pts_np[rng.choice(len(pts_np), len(sel), False)])
+        assert cov_b < cov_r, "block-wise FPS no better than random"
+        assert cov_b < 2.0 * cov_g, "block-wise FPS far off global FPS"
+
+    def test_block_fps_matches_global_fps_within_one_block(self):
+        # When the whole cloud fits one leaf the two algorithms coincide.
+        rng = np.random.default_rng(4)
+        pts = jnp.asarray(rng.normal(0, 1, (48, 3)).astype(np.float32))
+        part = core.partition(pts, th=TH)
+        samp = core.blockwise_fps(part, rate=0.25, k_out=12, bs=TH)
+        gi, _ = ref.fps(part.coords, part.valid, 12)
+        bi = np.asarray(samp.idx)[np.asarray(samp.valid)]
+        np.testing.assert_array_equal(np.sort(bi), np.sort(np.asarray(gi)))
+
+
+class TestBlockwiseBallQuery:
+    def test_neighbors_are_in_radius(self):
+        pts = cloud(5)
+        part, samp, nb = pipeline(pts, radius=0.3)
+        c = np.asarray(part.coords)
+        ce = c[np.asarray(samp.idx)]
+        ne = c[np.asarray(nb.idx)]
+        d = ((ce[:, None, :] - ne) ** 2).sum(-1)
+        m = np.asarray(nb.mask) & np.asarray(samp.valid)[:, None]
+        assert (d[m] <= 0.3 ** 2 + 1e-5).all()
+
+    def test_self_always_found(self):
+        # Centers are sampled from the cloud: distance-0 self neighbor must
+        # always be in the result set (it is in the leaf => in the window).
+        pts = cloud(6)
+        part, samp, nb = pipeline(pts, radius=0.2)
+        sval = np.asarray(samp.valid)
+        has_self = (np.asarray(nb.idx) == np.asarray(samp.idx)[:, None]).any(1)
+        assert has_self[sval].all()
+
+    def test_recall_vs_global(self):
+        # Paper regime: query radius well below the block extent (S3DIS
+        # radii are ~0.1 at scene scale with th=256). The residual recall
+        # loss is the paper's accepted deviation, recovered by retraining.
+        pts = cloud(7, n=2048)
+        radius = 0.08
+        part, samp, nb = pipeline(pts, radius=radius, num=16)
+        sval = np.asarray(samp.valid)
+        centers = np.asarray(part.coords)[np.asarray(samp.idx)[sval]]
+        gi, gc = ref.ball_query(part.coords, part.valid,
+                                jnp.asarray(centers),
+                                jnp.ones(len(centers), bool), radius, 16)
+        gi, gc = np.asarray(gi), np.asarray(gc)
+        bi = np.asarray(nb.idx)[sval]
+        bm = np.asarray(nb.mask)[sval]
+        recalls = []
+        for i in range(len(centers)):
+            gset = set(gi[i][:min(gc[i], 16)].tolist())
+            if gset:
+                recalls.append(len(gset & set(bi[i][bm[i]].tolist())) / len(gset))
+        assert np.mean(recalls) > 0.9, f"recall {np.mean(recalls)}"
+
+    def test_exact_when_single_block(self):
+        rng = np.random.default_rng(8)
+        pts = jnp.asarray(rng.normal(0, 0.3, (56, 3)).astype(np.float32))
+        part = core.partition(pts, th=TH)
+        samp = core.blockwise_fps(part, rate=0.25, k_out=14, bs=TH)
+        nb = core.blockwise_ball_query(part, samp, radius=0.25, num=8,
+                                       w=2 * TH)
+        sval = np.asarray(samp.valid)
+        centers = part.coords[samp.idx]
+        gi, gc = ref.ball_query(part.coords, part.valid, centers,
+                                samp.valid, 0.25, 8)
+        # same candidate set => identical neighbor sets
+        for i in np.where(sval)[0]:
+            bset = set(np.asarray(nb.idx)[i][np.asarray(nb.mask)[i]].tolist())
+            gset = set(np.asarray(gi)[i][:min(int(np.asarray(gc)[i]), 8)].tolist())
+            assert bset == gset
+
+
+class TestBlockwiseInterpolate:
+    def test_exact_when_single_block(self):
+        rng = np.random.default_rng(9)
+        pts = jnp.asarray(rng.normal(0, 0.3, (60, 3)).astype(np.float32))
+        part = core.partition(pts, th=TH)
+        samp = core.blockwise_fps(part, rate=0.25, k_out=15, bs=TH)
+        feats = jnp.asarray(rng.normal(0, 1, (15, 4)).astype(np.float32))
+        feats = feats * samp.valid[:, None]
+        out, i3, w3 = core.blockwise_interpolate(part, samp, feats, wc=32,
+                                                 bs=TH)
+        nvalid = int(samp.valid.sum())
+        gout, _, _ = ref.interpolate_3nn(
+            part.coords, samp.coords[:nvalid],
+            jnp.ones((nvalid,), bool), feats[:nvalid])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(gout),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_smooth_field_reconstruction(self):
+        pts = cloud(10, n=2048)
+        part, samp, _ = pipeline(pts)
+        f = jnp.sin(part.coords @ jnp.array([[1.0], [2.0], [0.5]]))
+        sfeats = f[samp.idx] * samp.valid[:, None]
+        out, _, w3 = core.blockwise_interpolate(part, samp, sfeats, wc=64,
+                                                bs=TH)
+        vp = np.asarray(part.valid)
+        err = np.abs(np.asarray(out) - np.asarray(f))[vp].mean()
+        assert err < 0.12, err
+        # weights are a convex combination
+        w = np.asarray(w3)[vp]
+        np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-4)
+
+
+class TestGather:
+    def test_gather_matches_ref(self):
+        rng = np.random.default_rng(11)
+        feats = jnp.asarray(rng.normal(0, 1, (256, 8)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, 256, (37, 5)))
+        np.testing.assert_array_equal(np.asarray(core.gather(feats, idx)),
+                                      np.asarray(ref.gather(feats, idx)))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([0.125, 0.25, 0.5]))
+def test_property_pipeline_shapes_and_masks(seed, rate):
+    rng = np.random.default_rng(seed)
+    n = 512
+    pts = jnp.asarray(rng.normal(0, 1, (n, 3)).astype(np.float32))
+    part = core.partition(pts, th=32)
+    samp = core.blockwise_fps(part, rate=rate, k_out=int(n * rate), bs=32)
+    nb = core.blockwise_ball_query(part, samp, radius=0.4, num=8, w=64)
+    assert samp.idx.shape == (int(n * rate),)
+    assert nb.idx.shape == (int(n * rate), 8)
+    sval = np.asarray(samp.valid)
+    # every valid sample has >=1 neighbor (itself)
+    assert (np.asarray(nb.cnt)[sval] >= 1).all()
+    # invalid sample slots have no neighbors marked
+    assert not np.asarray(nb.mask)[~sval].any()

@@ -1,0 +1,195 @@
+"""Property + behaviour tests for the Fractal partition engine."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+from repro.core import fractal as fr
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_cloud(seed, n, kind="clusters"):
+    rng = np.random.default_rng(seed)
+    if kind == "clusters":
+        k = max(1, n // 300)
+        centers = rng.uniform(-3, 3, (k, 3))
+        pts = np.concatenate([
+            rng.normal(c, rng.uniform(0.1, 0.5), (n // k, 3)) for c in centers
+        ])
+        pts = np.concatenate([pts, rng.uniform(-3, 3, (n - len(pts), 3))])
+    elif kind == "uniform":
+        pts = rng.uniform(-1, 1, (n, 3))
+    elif kind == "plane":  # coplanar: the paper's degenerate-dim case
+        pts = rng.uniform(-1, 1, (n, 3))
+        pts[:, 2] = 0.25
+    else:
+        raise ValueError(kind)
+    return jnp.asarray(pts.astype(np.float32))
+
+
+def check_invariants(pts, part, th, strategy):
+    n = pts.shape[0]
+    perm = np.asarray(part.perm)
+    assert sorted(perm.tolist()) == list(range(n)), "perm not a permutation"
+    np.testing.assert_allclose(np.asarray(part.coords),
+                               np.asarray(pts)[perm], rtol=0, atol=0)
+    isl = np.asarray(part.is_leaf)
+    real = np.where(isl)[0]
+    ls = np.asarray(part.leaf_start)[real]
+    lr = np.asarray(part.leaf_rsize)[real]
+    lv = np.asarray(part.leaf_vsize)[real]
+    # Leaves tile [0, n) contiguously in DFT order.
+    ends = ls + lr
+    assert ls[0] == 0 and ends[-1] == n and (ls[1:] == ends[:-1]).all()
+    assert (lv <= lr).all()
+    # Balanced unless flagged (uniform is allowed to be imbalanced: that is
+    # the paper's criticism of space-uniform partitioning).
+    if strategy != fr.UNIFORM:
+        assert bool(part.overflowed) == bool((lv > th).any())
+    # Parent range covers the leaf (search-space rule is well-formed).
+    ps = np.asarray(part.parent_start)[real]
+    pr = np.asarray(part.parent_rsize)[real]
+    assert (ps <= ls).all() and (ps + pr >= ends).all()
+    # Valid-prefix property: every leaf range is [valid... | invalid...].
+    vp = np.asarray(part.valid)
+    for s, v, r in zip(ls, lv, lr):
+        assert vp[s:s + v].all()
+        assert not vp[s + v:s + r].any()
+
+
+@pytest.mark.parametrize("strategy", fr.STRATEGIES)
+@pytest.mark.parametrize("kind", ["clusters", "uniform", "plane"])
+def test_partition_invariants(strategy, kind):
+    pts = make_cloud(0, 1024, kind)
+    part = jax.jit(
+        lambda p: core.partition(p, th=64, strategy=strategy))(pts)
+    check_invariants(pts, part, 64, strategy)
+
+
+def test_fractal_balances_clusters():
+    pts = make_cloud(3, 2048, "clusters")
+    part = jax.jit(lambda p: core.partition(p, th=128))(pts)
+    assert not bool(part.overflowed)
+    assert int(part.max_leaf_vsize) <= 128
+    assert int(part.sort_passes) == 0  # sorter-free: the paper's key claim
+
+
+def test_kdtree_uses_sorts_fractal_does_not():
+    pts = make_cloud(4, 1024, "clusters")
+    pf = jax.jit(lambda p: core.partition(p, th=64, strategy=fr.FRACTAL))(pts)
+    pk = jax.jit(lambda p: core.partition(p, th=64, strategy=fr.KDTREE))(pts)
+    assert int(pf.sort_passes) == 0
+    assert int(pk.sort_passes) >= int(
+        jnp.ceil(jnp.log2(1024 / 64)))  # one sort per level at least
+
+
+def test_traversal_count_matches_paper_formula():
+    # Paper: 1024 points -> 4 traversals; 289K -> 11 (th=256) for well-
+    # spread clouds.  Uniform clouds hit the information-theoretic minimum.
+    pts = make_cloud(5, 1024, "uniform")
+    part = jax.jit(lambda p: core.partition(p, th=256))(pts)
+    assert int(part.traversals) <= fr.default_depth(1024, 256)
+    assert int(part.traversals) >= math.ceil(math.log2(1024 / 256))
+
+
+def test_midpoint_rule_matches_alg1():
+    # Level-0 split must be the x midpoint of (max+min)/2 (paper Alg.1 row 5)
+    pts = make_cloud(6, 512, "uniform")
+    part = jax.jit(lambda p: core.partition(p, th=256, depth=1))(pts)
+    x = np.asarray(pts)[:, 0]
+    mid = (x.max() + x.min()) / 2
+    perm = np.asarray(part.perm)
+    ls = np.asarray(part.leaf_start)
+    lr = np.asarray(part.leaf_rsize)
+    real = np.where(np.asarray(part.is_leaf))[0]
+    assert len(real) == 2
+    left = perm[ls[real[0]]:ls[real[0]] + lr[real[0]]]
+    right = perm[ls[real[1]]:ls[real[1]] + lr[real[1]]]
+    assert (x[left] <= mid).all() and (x[right] > mid).all()
+
+
+def test_dims_cycle_xyz():
+    # With depth 3 every axis is used once: blocks are separated on x then
+    # y then z (Alg. 1 row 4).
+    rng = np.random.default_rng(7)
+    pts = jnp.asarray(rng.uniform(0, 1, (512, 3)).astype(np.float32))
+    part = jax.jit(
+        lambda p: core.partition(p, th=1000, depth=3,
+                                 strategy=fr.UNIFORM))(pts)
+    # 8 uniform cells == octants of the bbox.
+    real = np.where(np.asarray(part.is_leaf))[0]
+    assert len(real) == 8
+    c = np.asarray(part.coords)
+    ls, lr = np.asarray(part.leaf_start)[real], np.asarray(part.leaf_rsize)[real]
+    mids = (np.asarray(pts).max(0) + np.asarray(pts).min(0)) / 2
+    for b, (s, r) in enumerate(zip(ls, lr)):
+        blk = c[s:s + r]
+        if r == 0:
+            continue
+        for d in range(3):
+            bit = (b >> (2 - d)) & 1
+            if bit:
+                assert (blk[:, d] > mids[d]).all()
+            else:
+                assert (blk[:, d] <= mids[d]).all()
+
+
+def test_subtree_contiguity():
+    """DFT property: the paper's 'adjacent memory blocks correspond to
+    spatially adjacent regions' — any subtree is one contiguous range."""
+    pts = make_cloud(8, 1024, "clusters")
+    part = jax.jit(lambda p: core.partition(p, th=64))(pts)
+    real = np.where(np.asarray(part.is_leaf))[0]
+    slot = np.asarray(part.slot_of_leaf)[real]
+    ls = np.asarray(part.leaf_start)[real]
+    # DFT order: slots ascending <=> starts ascending.
+    assert (np.diff(slot) > 0).all()
+    assert (np.diff(ls) >= 0).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([37, 101, 256, 333]),
+       st.sampled_from([8, 16, 64]))
+def test_property_random_clouds(seed, n, th):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.normal(0, 1, (n, 3)).astype(np.float32))
+    part = core.partition(pts, th=th)
+    check_invariants(pts, part, th, fr.FRACTAL)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_padded_clouds(seed):
+    rng = np.random.default_rng(seed)
+    n, nv = 512, int(rng.integers(10, 512))
+    pts = jnp.asarray(rng.normal(0, 1, (n, 3)).astype(np.float32))
+    valid = jnp.arange(n) < nv
+    part = core.partition(pts, valid, th=32)
+    vp = np.asarray(part.valid)
+    perm = np.asarray(part.perm)
+    assert set(perm[vp].tolist()) == set(range(nv))
+    check_invariants(pts, part, 32, fr.FRACTAL)
+
+
+def test_duplicate_points_do_not_hang():
+    # All-identical coordinates: extrema midpoint == point, nothing is ever
+    # > mid, so the cloud cannot be split. Must terminate with overflow flag.
+    pts = jnp.ones((256, 3), jnp.float32)
+    part = jax.jit(lambda p: core.partition(p, th=32))(pts)
+    assert bool(part.overflowed)
+    check_invariants(pts, part, 32, fr.FRACTAL)
+
+
+def test_batched_vmap():
+    rng = np.random.default_rng(11)
+    pts = jnp.asarray(rng.normal(0, 1, (4, 512, 3)).astype(np.float32))
+    parts = jax.vmap(lambda p: core.partition(p, th=64))(pts)
+    assert parts.perm.shape == (4, 512)
+    for b in range(4):
+        part_b = jax.tree.map(lambda a: a[b], parts)
+        check_invariants(pts[b], part_b, 64, fr.FRACTAL)

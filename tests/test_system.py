@@ -1,0 +1,102 @@
+"""End-to-end system behaviour tests (the paper's full pipeline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.core import ref
+from repro.data import synthetic
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_full_fractalcloud_pipeline():
+    """Partition -> BWS -> BWG -> BWI -> BWGa on one scene, checking every
+    cross-op contract (the paper's Fig. 7 dataflow)."""
+    rng = np.random.default_rng(0)
+    n, th = 2048, 128
+    pts = jnp.asarray(np.concatenate([
+        rng.normal([0, 0, 0], 0.4, (900, 3)),
+        rng.normal([2, 2, 0], 0.4, (900, 3)),
+        rng.uniform(-1, 3, (248, 3))]).astype(np.float32))
+
+    @jax.jit
+    def pipeline(p):
+        part = core.partition(p, th=th)
+        samp = core.blockwise_fps(part, rate=0.25, k_out=n // 4, bs=th)
+        nb = core.blockwise_ball_query(part, samp, radius=0.3, num=16,
+                                       w=2 * th)
+        feats = jnp.sin(part.coords @ jnp.ones((3, 8)))       # (n, 8)
+        gathered = core.gather(feats, nb.idx)                 # BWGa
+        pooled = jnp.max(jnp.where(nb.mask[..., None], gathered, -1e30),
+                         axis=1)
+        pooled = jnp.where(nb.mask.any(-1, keepdims=True), pooled, 0.0)
+        out, _, _ = core.blockwise_interpolate(part, samp, pooled,
+                                               wc=64, bs=th)
+        return part, samp, nb, out
+
+    part, samp, nb, out = pipeline(pts)
+    assert not bool(part.overflowed)
+    assert int(samp.valid.sum()) > 0.9 * (n // 4)
+    assert bool(jnp.isfinite(out).all())
+    # every valid point got an interpolated value
+    vp = np.asarray(part.valid)
+    assert (np.abs(np.asarray(out))[vp].sum(-1) > 0).mean() > 0.99
+
+
+def test_pipeline_is_permutation_invariant():
+    """Shuffling the input cloud must not change the partition *structure*
+    (leaf point-sets are a function of geometry alone); the FPS sample set
+    may shift (the in-block start point is layout-dependent, like the
+    paper's random FPS seed) but stays substantially overlapping."""
+    rng = np.random.default_rng(1)
+    pts = rng.normal(0, 1, (512, 3)).astype(np.float32)
+    perm = rng.permutation(512)
+
+    def run(p):
+        part = core.partition(jnp.asarray(p), th=64)
+        samp = core.blockwise_fps(part, rate=0.25, k_out=128, bs=64)
+        real = np.where(np.asarray(part.is_leaf))[0]
+        c = np.asarray(part.coords)
+        ls = np.asarray(part.leaf_start)[real]
+        lr_ = np.asarray(part.leaf_rsize)[real]
+        leaf_sets = {frozenset(map(tuple, np.round(c[s:s + r], 5).tolist()))
+                     for s, r in zip(ls, lr_)}
+        sel = np.asarray(samp.coords)[np.asarray(samp.valid)]
+        return leaf_sets, set(map(tuple, np.round(sel, 5).tolist()))
+
+    leaves_a, samp_a = run(pts)
+    leaves_b, samp_b = run(pts[perm])
+    assert leaves_a == leaves_b, "partition structure not perm-invariant"
+    inter = len(samp_a & samp_b) / max(len(samp_a | samp_b), 1)
+    assert inter > 0.3, inter
+
+
+def test_end_to_end_determinism():
+    pts, _ = synthetic.classification_batch(0, 0, 1, 512)
+
+    @jax.jit
+    def run(p):
+        part = core.partition(p, th=64)
+        samp = core.blockwise_fps(part, rate=0.25, k_out=128, bs=64)
+        return samp.idx
+
+    a = run(pts[0])
+    b = run(pts[0])
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scaling_complexity_trend():
+    """Block ops scale ~linearly in n while global FPS is O(n^2): the cost
+    ratio must widen with n (paper Fig. 4's bottleneck-shift claim),
+    measured structurally via op-count models rather than wall-time."""
+    def global_ops(n, k):
+        return n * k                       # distance updates
+
+    def block_ops(n, th, rate):
+        nb = max(1, 2 * n // th)
+        return nb * th * int(rate * th)    # per-block FPS
+
+    r1 = global_ops(1024, 256) / block_ops(1024, 64, 0.25)
+    r2 = global_ops(65536, 16384) / block_ops(65536, 64, 0.25)
+    assert r2 > r1 * 10
