@@ -1,0 +1,57 @@
+"""jax version compatibility for mesh construction.
+
+The launchers (and the sharding tests) build meshes with
+``jax.make_mesh(shape, names, axis_types=(AxisType.Auto, ...))``.  The
+``axis_types`` knob only exists in jax >= 0.5 (sharding-in-types); on the
+0.4.x line every mesh axis is implicitly "auto" (GSPMD infers shardings),
+so ignoring the argument is semantics-preserving.  ``install()`` fills the
+two gaps in-place so call sites written against the newer API run on both:
+
+* ``jax.sharding.AxisType`` (Auto/Explicit/Manual enum) if missing;
+* a ``jax.make_mesh`` wrapper that accepts-and-drops ``axis_types``.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+class _CompatAxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = getattr(jax.sharding, "AxisType", _CompatAxisType)
+
+_installed = False
+
+
+def install():
+    """Idempotently patch the jax namespace (no-op on jax >= 0.5)."""
+    global _installed
+    if _installed:
+        return
+    _installed = True
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _CompatAxisType
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        orig = jax.make_mesh
+
+        @functools.wraps(orig)
+        def _make_mesh(axis_shapes, axis_names, *, devices=None,
+                       axis_types=None):
+            del axis_types  # pre-0.5 jax: every axis is Auto
+            return orig(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = _make_mesh
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    """``jax.make_mesh`` that tolerates ``axis_types`` on any jax version."""
+    install()
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices,
+                         axis_types=axis_types)

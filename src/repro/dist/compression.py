@@ -1,0 +1,76 @@
+"""Gradient compression codecs + error feedback.
+
+Cross-pod gradient reduction is wire-bound, so grads are compressed before
+the reduce: ``bf16`` (2x, deterministic) or ``int8`` (4x, per-tensor scale
+with *stochastic rounding* so the quantizer is unbiased).  Both codecs are
+lossy; ``apply_error_feedback`` keeps the per-tensor quantization residual
+and re-injects it into the next step's gradient (EF-SGD), which restores
+convergence to the uncompressed optimum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+METHODS = ("bf16", "int8")
+
+
+def compress(x, method: str, key=None):
+    """x -> (payload, meta).  ``meta`` is the int8 per-tensor scale
+    (max |x|), or None for bf16.  ``key`` drives stochastic rounding and is
+    required for int8."""
+    if method == "bf16":
+        return x.astype(jnp.bfloat16), None
+    if method == "int8":
+        if key is None:
+            raise ValueError("int8 compression needs a PRNG key "
+                             "(stochastic rounding)")
+        x = x.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(x))
+        y = x * (127.0 / jnp.maximum(scale, jnp.finfo(jnp.float32).tiny))
+        lo = jnp.floor(y)
+        frac = y - lo
+        q = lo + (jax.random.uniform(key, x.shape) < frac)
+        payload = jnp.clip(q, -127, 127).astype(jnp.int8)
+        return payload, scale
+    raise ValueError(f"unknown compression method {method!r}; "
+                     f"have {METHODS}")
+
+
+def decompress(payload, meta, method: str):
+    if method == "bf16":
+        return payload.astype(jnp.float32)
+    if method == "int8":
+        return payload.astype(jnp.float32) * (meta / 127.0)
+    raise ValueError(f"unknown compression method {method!r}; "
+                     f"have {METHODS}")
+
+
+def roundtrip(x, method: str, key=None):
+    """Compress-then-decompress (what the receiving end of the reduce
+    sees), dtype-preserving."""
+    payload, meta = compress(x, method, key)
+    return decompress(payload, meta, method).astype(x.dtype)
+
+
+def init_residual(params):
+    """Zero error-feedback residuals mirroring the parameter tree."""
+    return jax.tree.map(
+        lambda p: jnp.zeros(jnp.shape(p), jnp.float32), params)
+
+
+def apply_error_feedback(grads, residual, method: str, key):
+    """EF step: compress (grad + residual), carry the quantization error.
+
+    Returns (decompressed grads to feed the optimizer, new residual)."""
+    g_leaves, treedef = jax.tree.flatten(grads)
+    r_leaves = treedef.flatten_up_to(residual)
+    keys = jax.random.split(key, len(g_leaves))
+    out, new_res = [], []
+    for g, r, k in zip(g_leaves, r_leaves, keys):
+        acc = g.astype(jnp.float32) + r
+        dec = roundtrip(acc, method, k)
+        out.append(dec.astype(jnp.asarray(g).dtype))
+        new_res.append(acc - dec)
+    return (jax.tree.unflatten(treedef, out),
+            jax.tree.unflatten(treedef, new_res))

@@ -44,29 +44,10 @@ def _shardings_for_axes(axes_tree, mesh, rules=None):
     return logical.param_specs(axes_tree, mesh, rules)
 
 
-def _axis_size(mesh, ax):
-    if ax is None:
-        return 1
-    axes = (ax,) if isinstance(ax, str) else ax
-    size = 1
-    for a in axes:
-        size *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
-    return size
-
-
-def _fit_shardings(shard_tree, shape_tree, mesh):
-    """Null out spec axes whose size does not divide the dim (jit argument
-    shardings must divide evenly; e.g. batch=1 decode)."""
-
-    def one(sh, sds):
-        new = []
-        for dim, ax in enumerate(sh.spec):
-            if ax is not None and sds.shape[dim] % _axis_size(mesh, ax):
-                ax = None
-            new.append(ax)
-        return NamedSharding(mesh, P(*new))
-
-    return jax.tree.map(one, shard_tree, shape_tree)
+# Shared spec-fitting lives in dist.logical; keep the local names this
+# module's call sites were built against.
+_axis_size = logical.entry_size
+_fit_shardings = logical.fit_specs
 
 
 def _rules_for(shape, mesh):

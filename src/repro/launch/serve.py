@@ -36,8 +36,8 @@ def main(argv=None):
         raise SystemExit("enc-dec serving demo: use examples/ drivers")
     mesh = elastic.make_mesh(model_axis=args.model_axis)
     params, axes = M.init(jax.random.PRNGKey(args.seed), cfg)
-    params = jax.device_put(
-        params, logical.param_specs(axes, mesh, logical.RULES_V0))
+    params = jax.device_put(params, logical.fit_specs(
+        logical.param_specs(axes, mesh, logical.RULES_V0), params, mesh))
     max_len = args.prompt_len + args.max_new
     toks = jax.random.randint(jax.random.PRNGKey(1),
                               (args.batch, args.prompt_len), 0, cfg.vocab)

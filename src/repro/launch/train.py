@@ -61,7 +61,9 @@ def main(argv=None):
 
     def init_params():
         params, axes = M.init(jax.random.PRNGKey(args.seed), cfg)
-        return jax.device_put(params, logical.param_specs(axes, mesh, rules))
+        specs = logical.fit_specs(
+            logical.param_specs(axes, mesh, rules), params, mesh)
+        return jax.device_put(params, specs)
 
     b_sh = NamedSharding(mesh, P(tuple(
         a for a in ("pod", "data") if a in mesh.axis_names), ))
@@ -81,17 +83,18 @@ def main(argv=None):
         sh = {k: b_sh if v.ndim == 2 else NamedSharding(
             mesh, P(b_sh.spec[0], None, None))
             for k, v in batch.items()}
-        return jax.device_put(batch, sh)
+        return jax.device_put(batch, logical.fit_specs(sh, batch, mesh))
 
     base = steps_lib.make_train_step(cfg, opt_cfg,
                                      microbatch=args.microbatch)
     jitted = jax.jit(base)
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p, b: steps_lib.loss_fn(p, cfg, b)[0]))
 
     def train_step(params, opt_state, batch, return_grads=False):
         with logical.logical_rules(mesh, rules):
             if return_grads:
-                loss, grads = jax.value_and_grad(
-                    lambda p: steps_lib.loss_fn(p, cfg, batch)[0])(params)
+                loss, grads = grad_fn(params, batch)
                 return grads, {"loss": loss}
             return jitted(params, opt_state, batch)
 
@@ -103,8 +106,12 @@ def main(argv=None):
         loop_cfg, init_params=init_params, train_step=train_step,
         next_batch=next_batch, opt_cfg=opt_cfg)
     h = info["history"]
-    print(f"[train] done: loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}; "
-          f"{info['monitor']}")
+    if h:
+        print(f"[train] done: loss {h[0]['loss']:.4f} -> "
+              f"{h[-1]['loss']:.4f}; {info['monitor']}")
+    else:
+        print("[train] nothing to do: checkpoint already at "
+              f"step >= {args.steps}")
     return 0
 
 

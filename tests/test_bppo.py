@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro import core
 from repro.core import ref
@@ -194,21 +193,3 @@ class TestGather:
         idx = jnp.asarray(rng.integers(0, 256, (37, 5)))
         np.testing.assert_array_equal(np.asarray(core.gather(feats, idx)),
                                       np.asarray(ref.gather(feats, idx)))
-
-
-@settings(max_examples=6, deadline=None)
-@given(st.integers(0, 1000), st.sampled_from([0.125, 0.25, 0.5]))
-def test_property_pipeline_shapes_and_masks(seed, rate):
-    rng = np.random.default_rng(seed)
-    n = 512
-    pts = jnp.asarray(rng.normal(0, 1, (n, 3)).astype(np.float32))
-    part = core.partition(pts, th=32)
-    samp = core.blockwise_fps(part, rate=rate, k_out=int(n * rate), bs=32)
-    nb = core.blockwise_ball_query(part, samp, radius=0.4, num=8, w=64)
-    assert samp.idx.shape == (int(n * rate),)
-    assert nb.idx.shape == (int(n * rate), 8)
-    sval = np.asarray(samp.valid)
-    # every valid sample has >=1 neighbor (itself)
-    assert (np.asarray(nb.cnt)[sval] >= 1).all()
-    # invalid sample slots have no neighbors marked
-    assert not np.asarray(nb.mask)[~sval].any()

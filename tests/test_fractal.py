@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro import core
 from repro.core import fractal as fr
@@ -150,30 +149,6 @@ def test_subtree_contiguity():
     # DFT order: slots ascending <=> starts ascending.
     assert (np.diff(slot) > 0).all()
     assert (np.diff(ls) >= 0).all()
-
-
-@settings(max_examples=8, deadline=None)
-@given(st.integers(0, 10_000), st.sampled_from([37, 101, 256, 333]),
-       st.sampled_from([8, 16, 64]))
-def test_property_random_clouds(seed, n, th):
-    rng = np.random.default_rng(seed)
-    pts = jnp.asarray(rng.normal(0, 1, (n, 3)).astype(np.float32))
-    part = core.partition(pts, th=th)
-    check_invariants(pts, part, th, fr.FRACTAL)
-
-
-@settings(max_examples=5, deadline=None)
-@given(st.integers(0, 10_000))
-def test_property_padded_clouds(seed):
-    rng = np.random.default_rng(seed)
-    n, nv = 512, int(rng.integers(10, 512))
-    pts = jnp.asarray(rng.normal(0, 1, (n, 3)).astype(np.float32))
-    valid = jnp.arange(n) < nv
-    part = core.partition(pts, valid, th=32)
-    vp = np.asarray(part.valid)
-    perm = np.asarray(part.perm)
-    assert set(perm[vp].tolist()) == set(range(nv))
-    check_invariants(pts, part, 32, fr.FRACTAL)
 
 
 def test_duplicate_points_do_not_hang():

@@ -1,0 +1,61 @@
+"""Hypothesis property tests for the partition engine and the BPPO
+pipeline.  This module needs the optional ``hypothesis`` test dependency
+(``pip install -e .[test]``); where it is absent only these property tests
+skip — the deterministic oracle tests in test_fractal.py / test_bppo.py
+still run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro import core  # noqa: E402
+from repro.core import fractal as fr  # noqa: E402
+
+from test_fractal import check_invariants  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([37, 101, 256, 333]),
+       st.sampled_from([8, 16, 64]))
+def test_property_random_clouds(seed, n, th):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.normal(0, 1, (n, 3)).astype(np.float32))
+    part = core.partition(pts, th=th)
+    check_invariants(pts, part, th, fr.FRACTAL)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_padded_clouds(seed):
+    rng = np.random.default_rng(seed)
+    n, nv = 512, int(rng.integers(10, 512))
+    pts = jnp.asarray(rng.normal(0, 1, (n, 3)).astype(np.float32))
+    valid = jnp.arange(n) < nv
+    part = core.partition(pts, valid, th=32)
+    vp = np.asarray(part.valid)
+    perm = np.asarray(part.perm)
+    assert set(perm[vp].tolist()) == set(range(nv))
+    check_invariants(pts, part, 32, fr.FRACTAL)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([0.125, 0.25, 0.5]))
+def test_property_pipeline_shapes_and_masks(seed, rate):
+    rng = np.random.default_rng(seed)
+    n = 512
+    pts = jnp.asarray(rng.normal(0, 1, (n, 3)).astype(np.float32))
+    part = core.partition(pts, th=32)
+    samp = core.blockwise_fps(part, rate=rate, k_out=int(n * rate), bs=32)
+    nb = core.blockwise_ball_query(part, samp, radius=0.4, num=8, w=64)
+    assert samp.idx.shape == (int(n * rate),)
+    assert nb.idx.shape == (int(n * rate), 8)
+    sval = np.asarray(samp.valid)
+    # every valid sample has >=1 neighbor (itself)
+    assert (np.asarray(nb.cnt)[sval] >= 1).all()
+    # invalid sample slots have no neighbors marked
+    assert not np.asarray(nb.mask)[~sval].any()
