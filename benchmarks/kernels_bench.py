@@ -1,8 +1,9 @@
 """Paper §VI-C RSPU ablation analog: kernel-level costs and reuse factors.
 
-Wall-clock on CPU uses the XLA path (the Pallas kernels are TPU-targeted
-and interpret-mode timing is meaningless); the kernels are *verified*
-against their oracles here and their data-reuse model is derived:
+``impl`` picks the timed backend.  On CPU the default is the XLA path (the
+Pallas kernels are TPU-targeted and interpret-mode timing is meaningless);
+pass ``impl="pallas"`` on TPU for compiled-kernel rows.  The kernels are
+*verified* against their oracles here and their data-reuse model is derived:
 intra-block parallelism shares one parent window across all centers of a
 block (paper: 7.6x memory-access reduction for neighbor search), and the
 FPS mask pinning replaces the window-check skip."""
@@ -16,7 +17,8 @@ from repro.kernels import ops
 from benchmarks.common import emit, time_jit
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, impl: str | None = None):
+    impl = ops.resolve_impl(impl, default="xla")
     nb, bs, w, kc, num = (64, 256, 512, 64, 16)
     rng = np.random.default_rng(0)
     coords = jnp.asarray(rng.normal(0, 1, (nb, bs, 3)).astype(np.float32))
@@ -26,18 +28,18 @@ def run(quick: bool = True):
     centers = win[:, :kc, :]
     cmask = jnp.ones((nb, kc), bool)
 
-    us = time_jit(lambda: ops.fps_blocks(coords, mask, k=64, impl="xla"))
-    emit("kernels/fps_blocks/xla", us, f"nb{nb}_bs{bs}_k64")
+    us = time_jit(lambda: ops.fps_blocks(coords, mask, k=64, impl=impl))
+    emit(f"kernels/fps_blocks/{impl}", us, f"nb{nb}_bs{bs}_k64")
     us = time_jit(lambda: ops.ball_query_blocks(
-        centers, cmask, win, wmask, radius=0.5, num=num, impl="xla"))
-    emit("kernels/ball_query_blocks/xla", us, f"nb{nb}_kc{kc}_w{w}")
+        centers, cmask, win, wmask, radius=0.5, num=num, impl=impl))
+    emit(f"kernels/ball_query_blocks/{impl}", us, f"nb{nb}_kc{kc}_w{w}")
     us = time_jit(lambda: ops.knn_blocks(centers, win, wmask, k=3,
-                                         impl="xla"))
-    emit("kernels/knn_blocks/xla", us, "")
+                                         impl=impl))
+    emit(f"kernels/knn_blocks/{impl}", us, "")
     feats = jnp.asarray(rng.normal(0, 1, (nb, w, 64)).astype(np.float32))
     idx = jnp.asarray(rng.integers(0, w, (nb, 128)), jnp.int32)
-    us = time_jit(lambda: ops.gather_blocks(feats, idx, impl="xla"))
-    emit("kernels/gather_blocks/xla", us, "")
+    us = time_jit(lambda: ops.gather_blocks(feats, idx, impl=impl))
+    emit(f"kernels/gather_blocks/{impl}", us, "")
 
     # Pallas interpret-mode equivalence (correctness, not speed).
     a = ops.fps_blocks(coords[:4], mask[:4], k=16, impl="pallas")
@@ -51,3 +53,4 @@ def run(quick: bool = True):
     emit("kernels/window_reuse_model", 0.0,
          f"naive={naive_reads};reused={reuse_reads};"
          f"reduction={naive_reads / reuse_reads:.1f}x")
+    return impl  # resolved backend, recorded in the bench JSON meta

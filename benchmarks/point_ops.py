@@ -1,10 +1,16 @@
 """Paper Figs. 4/13/15/18: global vs block-parallel point operations.
 
-Measures FPS / ball-query / interpolation / gather in both modes and the
-scaling of the global-search O(n^2) cost with input size — the bottleneck
-shift the paper targets (point ops: 30% of runtime at 1K -> >90% at 289K).
+Measures FPS / ball-query / interpolation in both modes and the scaling of
+the global-search O(n^2) cost with input size — the bottleneck shift the
+paper targets (point ops: 30% of runtime at 1K -> >90% at 289K).  The
+Fractal partition is timed as its own row so per-op rows measure only the
+op (the partition is built once and reused by every BPPO op of a layer).
 Also derives the memory-traffic model: global ops touch n points per
-iteration; block ops touch <= 2*th (the paper's on-chip window)."""
+iteration; block ops touch <= 2*th (the paper's on-chip window).
+
+``impl`` selects the BPPO execute backend (xla | pallas); pallas rows off
+TPU run in interpret mode (correctness path, wall-clock not meaningful).
+"""
 from __future__ import annotations
 
 import jax
@@ -12,10 +18,14 @@ import jax.numpy as jnp
 
 from repro import core
 from repro.core import ref
+from repro.kernels import ops as kops
 from benchmarks.common import emit, scene_cloud, time_jit
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, impl: str | None = None):
+    impl = kops.resolve_impl(impl, default="xla")
+    note = "" if jax.default_backend() == "tpu" or impl == "xla" \
+        else "interpret_mode"
     sizes = [1024, 8192] if quick else [1024, 8192, 33_000, 131_072]
     th = 256
     rate, radius, num = 0.25, 0.2, 16
@@ -37,43 +47,35 @@ def run(quick: bool = True):
             p, c, jnp.ones((k,), bool), f)[0])
         us_gint = time_jit(g_int, pts, centers, feats)
 
-        # --- block-parallel (FractalCloud) ---
-        def bw_pipeline(p):
-            part = core.partition(p, th=th)
-            samp = core.blockwise_fps(part, rate=rate, k_out=k, bs=th)
-            return part, samp
+        # --- block-parallel (FractalCloud), each op timed on its own ---
+        # The value-producing call doubles as the compile warmup.
+        part_fn = jax.jit(lambda p: core.partition(p, th=th))
+        part = jax.block_until_ready(part_fn(pts))
+        us_part = time_jit(part_fn, pts, warmup=0)
 
-        part, samp = jax.jit(bw_pipeline)(pts)
-        b_fps = jax.jit(lambda p: core.blockwise_fps(
-            core.partition(p, th=th), rate=rate, k_out=k, bs=th).idx)
-        us_bfps = time_jit(b_fps, pts)
+        fps_fn = jax.jit(lambda pt: core.blockwise_fps(
+            pt, rate=rate, k_out=k, bs=th, impl=impl))
+        samp = jax.block_until_ready(fps_fn(part))
+        us_bfps = time_jit(fps_fn, part, warmup=0)
 
-        def _bq(p):
-            part = core.partition(p, th=th)
-            samp = core.blockwise_fps(part, rate=rate, k_out=k, bs=th)
-            return core.blockwise_ball_query(part, samp, radius=radius,
-                                             num=num, w=2 * th).idx
+        bq_fn = jax.jit(lambda pt, sm: core.blockwise_ball_query(
+            pt, sm, radius=radius, num=num, w=2 * th, impl=impl).idx)
+        us_bbq = time_jit(bq_fn, part, samp)
 
-        us_bbq = time_jit(jax.jit(_bq), pts)
+        int_fn = jax.jit(lambda pt, sm, f: core.blockwise_interpolate(
+            pt, sm, f, wc=128, bs=th, impl=impl)[0])
+        us_bint = time_jit(int_fn, part, samp, feats)
 
-        def b_int(p, f):
-            part = core.partition(p, th=th)
-            samp = core.blockwise_fps(part, rate=rate, k_out=k, bs=th)
-            return core.blockwise_interpolate(part, samp, f, wc=128,
-                                              bs=th)[0]
-
-        us_bint = time_jit(jax.jit(b_int), pts, feats)
-
+        emit(f"point_ops/partition/n{n}", us_part, "shared_by_all_bppo_ops")
         emit(f"point_ops/fps/global/n{n}", us_gfps,
              f"speedup={us_gfps / us_bfps:.2f}x_blockwise")
-        emit(f"point_ops/fps/blockwise/n{n}", us_bfps, "includes_partition")
+        emit(f"point_ops/fps/blockwise/{impl}/n{n}", us_bfps, note)
         emit(f"point_ops/ballquery/global/n{n}", us_gbq,
              f"speedup={us_gbq / us_bbq:.2f}x_blockwise")
-        emit(f"point_ops/ballquery/blockwise/n{n}", us_bbq,
-             "includes_partition+fps")
+        emit(f"point_ops/ballquery/blockwise/{impl}/n{n}", us_bbq, note)
         emit(f"point_ops/interp/global/n{n}", us_gint,
              f"speedup={us_gint / us_bint:.2f}x_blockwise")
-        emit(f"point_ops/interp/blockwise/n{n}", us_bint, "")
+        emit(f"point_ops/interp/blockwise/{impl}/n{n}", us_bint, note)
 
         # memory-traffic model (paper Fig. 15): bytes touched per op
         g_traffic = k * n * 12          # every center scans the cloud
@@ -81,3 +83,4 @@ def run(quick: bool = True):
         emit(f"point_ops/traffic_model/n{n}", 0.0,
              f"global_bytes={g_traffic};block_bytes={b_traffic};"
              f"reduction={g_traffic / b_traffic:.1f}x")
+    return impl  # resolved backend, recorded in the bench JSON meta

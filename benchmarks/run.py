@@ -2,7 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV (plus a summary).  ``--full`` runs
 paper-scale sizes (289K points, 400-step accuracy training); the default
-quick mode keeps CI fast.
+quick mode keeps CI fast.  ``--impl xla|pallas`` selects the point-op
+execute backend for the suites that dispatch kernels; ``--json DIR`` writes
+one machine-readable ``BENCH_<suite>.json`` per suite so the perf
+trajectory is tracked across PRs.
 
   partitioning   -> paper Figs. 5/16 (sorter vs traverser, 133x claim)
   point_ops      -> paper Figs. 4/13/15/18 (global vs BPPO, traffic model)
@@ -13,8 +16,21 @@ quick mode keeps CI fast.
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import os
 import sys
 import time
+
+
+def _write_suite_json(out_dir: str, suite: str, rows, meta: dict) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    payload = dict(meta, suite=suite, rows=[
+        {"name": n, "us_per_call": us, "derived": d} for n, us, d in rows])
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
 
 
 def main(argv=None) -> None:
@@ -23,10 +39,15 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: partitioning,point_ops,threshold,"
                          "accuracy,kernels")
+    ap.add_argument("--impl", default=None, choices=["xla", "pallas"],
+                    help="point-op execute backend for kernel-dispatching "
+                         "suites (default: $REPRO_POINT_IMPL or xla)")
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="write one BENCH_<suite>.json per suite into DIR")
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from benchmarks import (accuracy, kernels_bench, partitioning,
+    from benchmarks import (accuracy, common, kernels_bench, partitioning,
                             point_ops, threshold)
     suites = {
         "partitioning": partitioning.run,
@@ -39,7 +60,24 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     for name in chosen:
-        suites[name](quick=quick)
+        fn = suites[name]
+        kwargs = {"quick": quick}
+        if args.impl and "impl" in inspect.signature(fn).parameters:
+            kwargs["impl"] = args.impl
+        row_start = len(common.ROWS)
+        t_suite = time.time()
+        ret = fn(**kwargs)
+        if args.json:
+            meta = {"quick": quick,
+                    "elapsed_s": round(time.time() - t_suite, 3),
+                    "unix_time": int(t_suite)}
+            if isinstance(ret, str):
+                # kernel-dispatching suites return the backend that ran
+                # (--impl / $REPRO_POINT_IMPL resolved); others omit it.
+                meta["impl"] = ret
+            path = _write_suite_json(args.json, name,
+                                     common.ROWS[row_start:], meta)
+            print(f"# wrote {path}", file=sys.stderr)
     print(f"# total {time.time() - t0:.1f}s, quick={quick}",
           file=sys.stderr)
 

@@ -25,9 +25,13 @@ def main():
     ap.add_argument("--th", type=int, default=256)
     ap.add_argument("--point-ops", default="bppo",
                     choices=["bppo", "global"])
+    ap.add_argument("--impl", default=None, choices=["xla", "pallas"],
+                    help="bppo execute backend (default: $REPRO_POINT_IMPL"
+                         " or xla)")
     args = ap.parse_args()
 
-    cfg = pnn.pointnext_seg(n=args.n, point_ops=args.point_ops, th=args.th)
+    cfg = pnn.pointnext_seg(n=args.n, point_ops=args.point_ops, th=args.th,
+                            impl=args.impl)
     params = pnn.init(jax.random.PRNGKey(0), cfg)
 
     @jax.jit
@@ -35,17 +39,18 @@ def main():
         return jax.vmap(lambda c: pnn.apply(params, cfg, c))(clouds)
 
     # Warmup (compile)
-    clouds, labels = synthetic.segmentation_batch(0, 0, args.batch, args.n)
+    clouds, _ = synthetic.segmentation_batch(0, 0, args.batch, args.n)
     t0 = time.time()
     serve(params, clouds).block_until_ready()
     print(f"compiled in {time.time() - t0:.1f}s "
-          f"({args.point_ops} point ops, n={args.n}, th={args.th})")
+          f"({args.point_ops} point ops, impl={args.impl or 'default'}, "
+          f"n={args.n}, th={args.th})")
 
     done, lat = 0, []
     t_start = time.time()
     for r in range(args.requests // args.batch):
-        clouds, labels = synthetic.segmentation_batch(0, r + 1, args.batch,
-                                                      args.n)
+        clouds, _ = synthetic.segmentation_batch(0, r + 1, args.batch,
+                                                 args.n)
         t0 = time.time()
         out = serve(params, clouds)
         out.block_until_ready()

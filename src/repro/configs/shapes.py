@@ -21,7 +21,7 @@ SHAPES = {
 
 
 def applicable(cfg, shape: ShapeSpec) -> tuple[bool, str]:
-    """Skip rule: long_500k needs a sub-quadratic family (DESIGN.md §5)."""
+    """Skip rule: long_500k needs a sub-quadratic family (docs/DESIGN.md §5)."""
     if shape.name == "long_500k" and not cfg.long_context_ok:
         return False, ("skipped: pure full-attention arch; long_500k "
                        "requires sub-quadratic attention (SSM/hybrid)")

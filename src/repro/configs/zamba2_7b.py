@@ -2,7 +2,7 @@
 Mamba2 backbone (ssm_state=64) + shared attention blocks.
 [arXiv:2411.15242; unverified]
 
-Deviations (DESIGN.md §5): the shared attn+MLP block is applied every 9th
+Deviations (docs/DESIGN.md §5): the shared attn+MLP block is applied every 9th
 layer (pattern length must divide 81); weights are truly shared across
 repetitions (read from outside the layer scan).  Long-context serving uses
 a 4096-token sliding window on the shared-attn KV (Zamba2's trained context

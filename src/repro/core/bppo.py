@@ -14,6 +14,13 @@ All ops work in the *permuted (DFT) frame*: indices index the sorted arrays
 (``part.coords``); map back with ``part.perm[idx]``.  Everything is
 static-shape and vmap/pjit-friendly; leaves are the unit of parallelism —
 the same axis the launcher shards across chips.
+
+Each op is split into a *plan* phase (window/quota/compaction index math,
+pure jnp here) and an *execute* phase (the distance / argmax / top-k inner
+loops), which dispatches through ``kernels/ops.py``: ``impl="xla"`` runs the
+jnp oracle (kernels/ref.py, differentiable), ``impl="pallas"`` the TPU
+kernels (interpret=True off-TPU, inference-only).  ``impl=None`` resolves
+from ``$REPRO_POINT_IMPL`` (default ``"xla"``).  See docs/DESIGN.md §4.
 """
 from __future__ import annotations
 
@@ -23,26 +30,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.fractal import FractalPartition, leaf_from, leaf_view, \
-    subtree_slot_range, window_from, window_view
+    subtree_slot_range, window_from
 from repro.dist.logical import lc
-
-
-def _leaf_chunks(arrays, chunk):
-    """Pad leading (ML) dims to a chunk multiple and reshape to
-    (n_chunks, chunk, ...) for lax.map/scan over leaf chunks (bounds the
-    live distance-tensor footprint at large scale)."""
-    ml = arrays[0].shape[0]
-    pad = (-ml) % chunk
-
-    def prep(a):
-        if pad:
-            a = jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
-        return a.reshape((ml + pad) // chunk, chunk, *a.shape[1:])
-
-    return tuple(prep(a) for a in arrays), ml, pad
+from repro.kernels import ops as kops
 
 Array = jax.Array
 _INF = jnp.float32(3.0e38)
+
+
+def _resolve(impl):
+    # bppo ops default to the jnp path (differentiable, fast on CPU); the
+    # kernel layer's own default stays "pallas".
+    return kops.resolve_impl(impl, default="xla")
 
 
 @jax.tree_util.register_dataclass
@@ -68,34 +67,17 @@ class BWSamples:
         return self.idx.shape[0]
 
 
-def _block_fps(coords: Array, vmask: Array, k: int):
-    """Masked FPS inside one block (coords (bs,3)); returns local idx (k,).
-
-    The paper's RSPU runs exactly this loop per block; the window-check skip
-    becomes masking (visited points pinned to -inf) — see DESIGN.md §2.
-    """
-    coords = coords.astype(jnp.float32)
-
-    def dist_to(i):
-        d = coords - coords[i][None, :]
-        return jnp.sum(d * d, axis=-1)
-
-    start = jnp.argmax(vmask).astype(jnp.int32)  # valid-prefix => 0
-    mind = jnp.where(vmask, dist_to(start), -_INF).at[start].set(-_INF)
-
-    def step(m, _):
-        nxt = jnp.argmax(m).astype(jnp.int32)
-        m = jnp.minimum(m, jnp.where(vmask, dist_to(nxt), -_INF))
-        m = m.at[nxt].set(-_INF)
-        return m, nxt
-
-    _, rest = jax.lax.scan(step, mind, None, length=k - 1)
-    return jnp.concatenate([start[None], rest])
-
-
 def blockwise_fps(part: FractalPartition, *, rate: float, k_out: int,
-                  bs: int, kbm: int | None = None) -> BWSamples:
-    """Block-wise sampling (paper BWS): fixed-rate FPS per leaf, aggregated."""
+                  bs: int, kbm: int | None = None,
+                  impl: str | None = None) -> BWSamples:
+    """Block-wise sampling (paper BWS): fixed-rate FPS per leaf, aggregated.
+
+    Plan: leaf views + quotas + leaf-major compaction.  Execute: the masked
+    FPS loop itself (the paper's RSPU sampling mode; the window-check skip
+    becomes masking, visited points pinned to -inf — docs/DESIGN.md §2) runs per
+    leaf via ``kernels.ops.fps_blocks``.
+    """
+    impl = _resolve(impl)
     if kbm is None:
         kbm = max(1, int(round(rate * bs)) + 1)
     kbm = min(kbm, bs)
@@ -105,7 +87,7 @@ def blockwise_fps(part: FractalPartition, *, rate: float, k_out: int,
     quota = jnp.round(rate * part.leaf_vsize).astype(jnp.int32)
     quota = jnp.where(part.is_leaf, jnp.minimum(quota, kbm), 0)
 
-    local = jax.vmap(lambda c, m: _block_fps(c, m, kbm))(pts, mask)
+    local = kops.fps_blocks(pts, mask, k=kbm, impl=impl)
     j = jnp.arange(kbm, dtype=jnp.int32)[None, :]
     bmask = (j < quota[:, None])
     gidx = jnp.clip(part.leaf_start[:, None] + local, 0, part.n - 1)
@@ -140,86 +122,91 @@ class BWNeighbors:
     d2: Array     # (k_out, num) squared distances
 
 
-def _select_neighbors(d: Array, wmask: Array, num: int):
-    """(…, w) distances -> indices/d2 of the num nearest valid columns."""
-    d = jnp.where(wmask, d, _INF)
-    neg, idx = jax.lax.top_k(-d, num)
-    return idx.astype(jnp.int32), -neg
+def _window_to_global(widx: Array, lidx: Array) -> Array:
+    """Map local-to-window neighbor indices to sorted-array indices."""
+    return jnp.take_along_axis(
+        jnp.broadcast_to(widx[:, None, :], lidx.shape[:2] + widx.shape[1:]),
+        lidx, axis=-1)
 
 
 def _neighbor_slices(part: FractalPartition, samp: BWSamples):
+    """Per-leaf slice arrays the neighbor plans chunk over."""
     return (part.leaf_start, part.leaf_rsize, part.parent_start,
             part.parent_rsize, part.parent_vsize, part.is_leaf,
             samp.gidx, samp.block_mask)
 
 
-def _bq_slice(part, sl, *, r2, num, w):
+def _chunked_slices(sl, slice_fn, chunk):
+    """Run a per-leaf-slice plan+execute body, whole or chunk at a time.
+
+    With ``chunk``, windows are *built inside* each lax.map step, so the
+    live footprint is one chunk's (chunk, w, 3) window tiles plus the
+    kernel's (chunk, kbm, w) distance tile — not the full-ML plan tensors.
+    Padded slice rows carry zeroed starts/masks and are sliced off."""
+    if chunk is None:
+        return slice_fn(sl)
+    chunks, ml = kops.leaf_chunks(sl, chunk)
+    out = jax.lax.map(slice_fn, chunks)
+    return jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:])[:ml], out)
+
+
+def _bq_slice(part, sl, *, r2, radius, num, w, impl):
     ls, lr, ps, pr, pv, il, gidx, bmask = sl
     win, wmask, widx = window_from(ls, lr, ps, pr, pv, il, part.coords,
                                    part.valid, w)
     win = lc(win, "blocks", None, None)
     centers = lc(part.coords[gidx], "blocks", None, None)
-    d = jnp.sum((centers[:, :, None, :] - win[:, None, :, :]) ** 2, axis=-1)
-    nidx, nd2 = _select_neighbors(d, wmask[:, None, :], num)
+    lidx, nd2, cnt = kops.ball_query_blocks(centers, bmask, win, wmask,
+                                            radius=radius, num=num,
+                                            impl=impl)
+    nd2 = jnp.maximum(nd2, 0.0)  # expanded-form sqdist can cancel below 0
     in_r = (nd2 <= r2) & bmask[..., None]
-    cnt = jnp.sum((jnp.where(wmask[:, None, :], d, _INF) <= r2), axis=-1)
     # Pad empty slots with the nearest neighbor (ref.py convention).
-    nidx = jnp.where(in_r, nidx, nidx[..., :1])
-    g = jnp.take_along_axis(
-        jnp.broadcast_to(widx[:, None, :], nidx.shape[:2] + widx.shape[1:]),
-        nidx, axis=-1)
-    return g, in_r, cnt.astype(jnp.int32), nd2
+    lidx = jnp.where(in_r, lidx, lidx[..., :1])
+    return _window_to_global(widx, lidx), in_r, cnt, nd2
 
 
 def blockwise_ball_query(part: FractalPartition, samp: BWSamples, *,
                          radius: float, num: int, w: int,
-                         chunk: int | None = None) -> BWNeighbors:
+                         chunk: int | None = None,
+                         impl: str | None = None) -> BWNeighbors:
     """Block-wise grouping (paper BWG): centers search their parent window.
 
-    ``chunk`` processes that many leaves per lax.map step (large-scale
-    memory bound: the live (chunk, kbm, w) distance tile replaces the full
-    (ML, kbm, w) tensor)."""
+    Plan: window/center tiles + index translation + compaction.  Execute:
+    distance matrix + in-radius top-k via ``kernels.ops.ball_query_blocks``.
+    ``chunk`` processes that many leaves per lax.map step — window tiles
+    and the (chunk, kbm, w) distance tile replace the full-ML tensors."""
+    impl = _resolve(impl)
     r2 = jnp.float32(radius) ** 2
-    sl = _neighbor_slices(part, samp)
-    if chunk is None:
-        out = _bq_slice(part, sl, r2=r2, num=num, w=w)
-    else:
-        chunks, ml, pad = _leaf_chunks(sl, chunk)
-        out = jax.lax.map(
-            lambda s: _bq_slice(part, s, r2=r2, num=num, w=w), chunks)
-        out = jax.tree.map(
-            lambda a: a.reshape(-1, *a.shape[2:])[:ml], out)
+    out = _chunked_slices(
+        _neighbor_slices(part, samp),
+        lambda s: _bq_slice(part, s, r2=r2, radius=radius, num=num, w=w,
+                            impl=impl), chunk)
     g, in_r, cnt, nd2 = out
     return _compact_neighbors(samp, g, in_r, cnt, nd2, num)
 
 
-def _knn_slice(part, sl, *, k, w):
+def _knn_slice(part, sl, *, k, w, impl):
     ls, lr, ps, pr, pv, il, gidx, bmask = sl
     win, wmask, widx = window_from(ls, lr, ps, pr, pv, il, part.coords,
                                    part.valid, w)
     win = lc(win, "blocks", None, None)
     centers = lc(part.coords[gidx], "blocks", None, None)
-    d = jnp.sum((centers[:, :, None, :] - win[:, None, :, :]) ** 2, axis=-1)
-    nidx, nd2 = _select_neighbors(d, wmask[:, None, :], k)
+    lidx, nd2 = kops.knn_blocks(centers, win, wmask, k=k, impl=impl)
     ok = (nd2 < _INF) & bmask[..., None]
-    cnt = jnp.sum(ok, axis=-1)
-    g = jnp.take_along_axis(
-        jnp.broadcast_to(widx[:, None, :], nidx.shape[:2] + widx.shape[1:]),
-        nidx, axis=-1)
-    return g, ok, cnt.astype(jnp.int32), nd2
+    nd2 = jnp.maximum(nd2, 0.0)
+    cnt = jnp.sum(ok, axis=-1).astype(jnp.int32)
+    return _window_to_global(widx, lidx), ok, cnt, nd2
 
 
 def blockwise_knn(part: FractalPartition, samp: BWSamples, *, k: int,
-                  w: int, chunk: int | None = None) -> BWNeighbors:
+                  w: int, chunk: int | None = None,
+                  impl: str | None = None) -> BWNeighbors:
     """Block-wise kNN of sampled centers inside their parent window."""
-    sl = _neighbor_slices(part, samp)
-    if chunk is None:
-        out = _knn_slice(part, sl, k=k, w=w)
-    else:
-        chunks, ml, pad = _leaf_chunks(sl, chunk)
-        out = jax.lax.map(lambda s: _knn_slice(part, s, k=k, w=w), chunks)
-        out = jax.tree.map(
-            lambda a: a.reshape(-1, *a.shape[2:])[:ml], out)
+    impl = _resolve(impl)
+    out = _chunked_slices(
+        _neighbor_slices(part, samp),
+        lambda s: _knn_slice(part, s, k=k, w=w, impl=impl), chunk)
     g, ok, cnt, nd2 = out
     return _compact_neighbors(samp, g, ok, cnt, nd2, k)
 
@@ -260,8 +247,13 @@ def coarse_window_ranges(part: FractalPartition, samp: BWSamples):
     return ca, cb
 
 
-def _interp_slice(part, samp, feats, sl, *, wc, bs, eps):
-    """One leaf-slice of block-wise interpolation; returns scatter payload."""
+def _interp_slice(part, samp, feats, sl, *, wc, bs, eps, impl):
+    """One leaf-slice of block-wise interpolation; returns scatter payload.
+
+    Plan: coarse candidate windows (contiguous ranges of the compacted
+    sample array) + IDW weights.  Execute: the 3-NN select runs through the
+    kNN kernel and the feature fetch through the in-window gather kernel.
+    """
     n = part.n
     lo, cb, il, ls, lv = sl
     j = jnp.arange(wc, dtype=jnp.int32)
@@ -273,8 +265,8 @@ def _interp_slice(part, samp, feats, sl, *, wc, bs, eps):
 
     fine, fmask, fidx = leaf_from(ls, lv, il, part.coords, bs)
     fine = lc(fine, "blocks", None, None)
-    d = jnp.sum((fine[:, :, None, :] - cpts[:, None, :, :]) ** 2, axis=-1)
-    nidx, nd2 = _select_neighbors(d, cmask[:, None, :], 3)  # (c, bs, 3)
+    nidx, nd2 = kops.knn_blocks(fine, cpts, cmask, k=3, impl=impl)
+    nd2 = jnp.maximum(nd2, 0.0)
     ok = nd2 < _INF
     wgt = jnp.where(ok, 1.0 / (nd2 + eps), 0.0)
     wsum = jnp.sum(wgt, axis=-1, keepdims=True)
@@ -282,7 +274,9 @@ def _interp_slice(part, samp, feats, sl, *, wc, bs, eps):
     samp_idx = jnp.take_along_axis(
         jnp.broadcast_to(cidx[:, None, :], nidx.shape[:2] + cidx.shape[1:]),
         nidx, axis=-1)                                    # into compacted samp
-    vals = feats[samp_idx]                                # (c, bs, 3, C)
+    c = cidx.shape[0]
+    vals = kops.gather_blocks(feats[cidx], nidx.reshape(c, -1), impl=impl)
+    vals = vals.reshape(c, bs, 3, feats.shape[-1])        # (c, bs, 3, C)
     blended = jnp.sum(vals * wgt[..., None], axis=-2)     # (c, bs, C)
     flat_pos = jnp.where(fmask, fidx, n).reshape(-1)
     return flat_pos, blended, samp_idx, wgt
@@ -290,7 +284,8 @@ def _interp_slice(part, samp, feats, sl, *, wc, bs, eps):
 
 def blockwise_interpolate(part: FractalPartition, samp: BWSamples,
                           feats: Array, *, wc: int, bs: int,
-                          eps: float = 1e-8, chunk: int | None = None):
+                          eps: float = 1e-8, chunk: int | None = None,
+                          impl: str | None = None):
     """Block-wise interpolation (paper BWI): 3-NN IDW feature propagation
     from the sampled (coarse) cloud back to every point, with the candidate
     set restricted to coarse samples of the leaf's parent subtree.
@@ -300,6 +295,7 @@ def blockwise_interpolate(part: FractalPartition, samp: BWSamples,
     ``chunk`` scans over leaf chunks, scattering into the output carry (the
     live footprint is one chunk's distance/feature tiles).
     """
+    impl = _resolve(impl)
     n, ml = part.n, part.ml
     c_feats = feats.shape[-1]
     ca, cb = coarse_window_ranges(part, samp)
@@ -324,14 +320,14 @@ def blockwise_interpolate(part: FractalPartition, samp: BWSamples,
 
     if chunk is None:
         payload = _interp_slice(part, samp, feats, sl, wc=wc, bs=bs,
-                                eps=eps)
+                                eps=eps, impl=impl)
         out, idx3, w3 = scatter((out, idx3, w3), payload)
     else:
-        chunks, _, _ = _leaf_chunks(sl, chunk)
+        chunks, _ = kops.leaf_chunks(sl, chunk)
 
         def body(carry, s):
             payload = _interp_slice(part, samp, feats, s, wc=wc, bs=bs,
-                                    eps=eps)
+                                    eps=eps, impl=impl)
             return scatter(carry, payload), None
 
         (out, idx3, w3), _ = jax.lax.scan(body, (out, idx3, w3), chunks)
@@ -339,8 +335,9 @@ def blockwise_interpolate(part: FractalPartition, samp: BWSamples,
 
 
 def gather(feats: Array, idx: Array) -> Array:
-    """Block-wise gathering (paper BWGa). Functionally a take; the Pallas
-    kernel (kernels/gather.py) exploits that ``idx`` rows produced by BPPO
-    only touch one parent window, so each grid step gathers from a VMEM-
-    resident window instead of all of HBM."""
+    """Block-wise gathering (paper BWGa). Functionally a take over the
+    *compacted* index frame; the in-window Pallas gather kernel
+    (``kernels.ops.gather_blocks``) is dispatched where the window structure
+    still exists — inside ``blockwise_interpolate`` — because each of its
+    ``idx`` rows only touches one VMEM-resident parent window."""
     return feats[idx]

@@ -30,7 +30,7 @@ import threading
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-# v0 baseline (DESIGN.md §6): clouds/batch -> data axes, fractal leaves and
+# v0 baseline (docs/DESIGN.md §6): clouds/batch -> data axes, fractal leaves and
 # tensor-parallel dims -> model, params FSDP-sharded over data.  Key order
 # is rule priority (earlier wins a contested mesh axis).
 RULES_V0 = {

@@ -2,7 +2,8 @@
 
 Per kernel: ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec tiling,
 ``ref.py`` the pure-jnp oracle with the identical contract, ``ops.py`` the
-jit'd public wrappers (layout/padding + impl dispatch).
+jit'd public wrappers — the dispatch layer owning lane-major padding,
+leaf-chunking, and xla/pallas impl selection (docs/DESIGN.md §4).
 """
 from repro.kernels import ops
 from repro.kernels.ops import (ball_query_blocks, fps_blocks,

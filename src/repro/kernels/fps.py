@@ -3,7 +3,7 @@
 One grid step = one Fractal leaf (the paper's inter-block parallelism): the
 block's coordinates live in VMEM for the whole FPS loop, the running
 min-distance vector is a VMEM scratch, and the ASIC's window-check skip is
-realized as masking (visited lanes pinned to -inf; see DESIGN.md §2).
+realized as masking (visited lanes pinned to -inf; see docs/DESIGN.md §2).
 
 Layout: coords are (NB, 3, BS) so the point axis is the 128-lane axis.
 """

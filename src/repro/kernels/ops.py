@@ -1,18 +1,37 @@
-"""jit'd public wrappers for the FractalCloud kernels.
+"""jit'd public wrappers for the FractalCloud kernels — the *dispatch layer*.
 
 Each op accepts ``impl``:
 
 * ``"pallas"``    — the TPU kernel (interpret=True off-TPU, compiled on TPU);
-* ``"xla"``       — the pure-jnp oracle (kernels/ref.py), which is also what
-                    core/bppo.py uses by default on CPU.
+* ``"xla"``       — the pure-jnp oracle (kernels/ref.py);
+* ``None``        — resolved from ``$REPRO_POINT_IMPL`` (default ``"pallas"``
+                    here at the kernel layer; ``core/bppo.py`` defaults its
+                    callers to ``"xla"``).
 
-Wrappers own the layout contract: user-facing tensors are (NB, BS, 3) /
-(NB, BS); kernels consume lane-major (NB, 3, BS') with BS' padded to the
-128-lane boundary (padded lanes masked invalid).
+This layer owns the whole execution contract so callers never re-implement
+it ad hoc (docs/DESIGN.md §4):
+
+* *layout* — user-facing tensors are (NB, BS, 3) / (NB, BS); kernels consume
+  lane-major (NB, 3, BS') with BS' padded to the 128-lane boundary (padded
+  lanes masked invalid) and results sliced back to caller shapes;
+* *leaf-chunking* — every op takes ``chunk``: the block axis is processed
+  ``chunk`` blocks per ``lax.map`` step, bounding the live distance /
+  gather-tile footprint at large scale (``leaf_chunks`` is the shared
+  pad+reshape helper).
+
+``impl=None`` is resolved eagerly in the public wrappers, before the jitted
+inner functions (whose caches key on the concrete impl) — flipping
+``$REPRO_POINT_IMPL`` mid-process affects the next eager call, never a
+stale jit cache.  Inside an outer jit, resolution still happens at that
+trace's time.
+
+The pallas impl is inference-only: no VJP rules are registered, so wrap
+training paths with ``impl="xla"`` (grads flow through the jnp oracle).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +44,16 @@ from repro.kernels import knn as _knn
 from repro.kernels import ref as _ref
 
 LANE = 128
+IMPLS = ("xla", "pallas")
+
+
+def resolve_impl(impl: str | None = None, default: str = "pallas") -> str:
+    """Resolve an impl choice: explicit arg > $REPRO_POINT_IMPL > default."""
+    if impl is None:
+        impl = os.environ.get("REPRO_POINT_IMPL") or default
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    return impl
 
 
 def _on_tpu() -> bool:
@@ -48,61 +77,151 @@ def _to_lane_major(coords, mask):
     return c, m
 
 
-@functools.partial(jax.jit, static_argnames=("k", "impl"))
-def fps_blocks(coords, mask, *, k: int, impl: str = "pallas"):
+def leaf_chunks(arrays, chunk):
+    """Pad leading (block) dims to a chunk multiple and reshape to
+    (n_chunks, chunk, ...) for lax.map/scan over block chunks.  Returns
+    (chunked arrays, original leading size).
+
+    Public: callers that stream a custom carry over chunks (e.g. bppo's
+    interpolation scatter-scan) build their chunk layout here so the
+    pad/reshape contract lives in one place."""
+    nb = arrays[0].shape[0]
+    pad = (-nb) % chunk
+
+    def prep(a):
+        if pad:
+            a = jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        return a.reshape((nb + pad) // chunk, chunk, *a.shape[1:])
+
+    return tuple(prep(a) for a in arrays), nb
+
+
+def _chunked(fn, arrays, chunk):
+    """Apply ``fn`` to ``chunk``-block slices of the leading axis via
+    lax.map (padded blocks carry zero masks and are sliced off)."""
+    nb = arrays[0].shape[0]
+    if chunk is None or chunk >= nb:
+        return fn(*arrays)
+    chunks, _ = leaf_chunks(arrays, chunk)
+    out = jax.lax.map(lambda xs: fn(*xs), chunks)
+    return jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:])[:nb], out)
+
+
+def fps_blocks(coords, mask, *, k: int, impl: str | None = None,
+               chunk: int | None = None):
     """coords (NB, BS, 3), mask (NB, BS) -> sampled in-block idx (NB, k)."""
-    c, m = _to_lane_major(coords, mask)
-    if impl == "pallas":
-        return _fps.fps_blocks(c, m, k=k, interpret=not _on_tpu())
-    return _ref.fps_blocks(c, m, k=k)
+    return _fps_blocks(coords, mask, k=k, impl=resolve_impl(impl),
+                       chunk=chunk)
 
 
-@functools.partial(jax.jit, static_argnames=("radius", "num", "impl"))
+@functools.partial(jax.jit, static_argnames=("k", "impl", "chunk"))
+def _fps_blocks(coords, mask, *, k, impl, chunk):
+    def run(coords, mask):
+        c, m = _to_lane_major(coords, mask)
+        if impl == "pallas":
+            return _fps.fps_blocks(c, m, k=k, interpret=not _on_tpu())
+        return _ref.fps_blocks(c, m, k=k)
+
+    return _chunked(run, (coords, mask), chunk)
+
+
 def ball_query_blocks(centers, cmask, window, wmask, *, radius: float,
-                      num: int, impl: str = "pallas"):
+                      num: int, impl: str | None = None,
+                      chunk: int | None = None):
     """centers (NB,KC,3), cmask (NB,KC), window (NB,W,3), wmask (NB,W)
-    -> (idx (NB,KC,num) local-to-window, d2, cnt (NB,KC))."""
-    c, cm = _to_lane_major(centers, cmask)
-    w, wm = _to_lane_major(window, wmask)
-    if impl == "pallas":
-        return _bq.ball_query_blocks(c, cm, w, wm, radius=radius, num=num,
-                                     interpret=not _on_tpu())
-    return _ref.ball_query_blocks(c, cm, w, wm, radius=radius, num=num)
+    -> (idx (NB,KC,num) local-to-window, d2 (NB,KC,num), cnt (NB,KC))."""
+    return _ball_query_blocks(centers, cmask, window, wmask, radius=radius,
+                              num=num, impl=resolve_impl(impl), chunk=chunk)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "impl"))
-def knn_blocks(queries, window, wmask, *, k: int, impl: str = "pallas"):
+@functools.partial(jax.jit,
+                   static_argnames=("radius", "num", "impl", "chunk"))
+def _ball_query_blocks(centers, cmask, window, wmask, *, radius, num, impl,
+                       chunk):
+    kc = centers.shape[1]
+
+    def run(centers, cmask, window, wmask):
+        c, cm = _to_lane_major(centers, cmask)
+        w, wm = _to_lane_major(window, wmask)
+        if impl == "pallas":
+            idx, d2, cnt = _bq.ball_query_blocks(
+                c, cm, w, wm, radius=radius, num=num,
+                interpret=not _on_tpu())
+        else:
+            idx, d2, cnt = _ref.ball_query_blocks(c, cm, w, wm,
+                                                  radius=radius, num=num)
+        return idx[:, :kc], d2[:, :kc], cnt[:, :kc]
+
+    return _chunked(run, (centers, cmask, window, wmask), chunk)
+
+
+def knn_blocks(queries, window, wmask, *, k: int, impl: str | None = None,
+               chunk: int | None = None):
     """queries (NB,Q,3), window (NB,W,3), wmask (NB,W)
-    -> (idx (NB,Q,k) local-to-window, d2)."""
-    q, _ = _to_lane_major(queries, jnp.ones(queries.shape[:2], bool))
-    w, wm = _to_lane_major(window, wmask)
-    if impl == "pallas":
-        return _knn.knn_blocks(q, w, wm, k=k, interpret=not _on_tpu())
-    return _ref.knn_blocks(q, w, wm, k=k)
+    -> (idx (NB,Q,k) local-to-window, d2 (NB,Q,k))."""
+    return _knn_blocks(queries, window, wmask, k=k, impl=resolve_impl(impl),
+                       chunk=chunk)
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def gather_blocks(window_feats, idx, *, impl: str = "pallas"):
-    """window_feats (NB, W, C), idx (NB, M) -> (NB, M, C)."""
-    if impl == "pallas":
-        f = _pad_lanes(window_feats, -1)          # C on lanes
-        f = _pad_lanes(f, -2, mult=8)             # W on sublanes
-        out = _ga.gather_blocks(f, idx, interpret=not _on_tpu())
-        return out[..., :window_feats.shape[-1]]
-    return _ref.gather_blocks(window_feats, idx)
+@functools.partial(jax.jit, static_argnames=("k", "impl", "chunk"))
+def _knn_blocks(queries, window, wmask, *, k, impl, chunk):
+    nq = queries.shape[1]
+
+    def run(queries, window, wmask):
+        q, _ = _to_lane_major(queries, jnp.ones(queries.shape[:2], bool))
+        w, wm = _to_lane_major(window, wmask)
+        if impl == "pallas":
+            idx, d2 = _knn.knn_blocks(q, w, wm, k=k,
+                                      interpret=not _on_tpu())
+        else:
+            idx, d2 = _ref.knn_blocks(q, w, wm, k=k)
+        return idx[:, :nq], d2[:, :nq]
+
+    return _chunked(run, (queries, window, wmask), chunk)
 
 
-@functools.partial(jax.jit, static_argnames=("da", "db", "impl"))
+def gather_blocks(window_feats, idx, *, impl: str | None = None,
+                  chunk: int | None = None):
+    """window_feats (NB, W, C), idx (NB, M) local-to-window -> (NB, M, C)."""
+    return _gather_blocks(window_feats, idx, impl=resolve_impl(impl),
+                          chunk=chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def _gather_blocks(window_feats, idx, *, impl, chunk):
+    c_out = window_feats.shape[-1]
+
+    def run(window_feats, idx):
+        if impl == "pallas":
+            f = _pad_lanes(window_feats, -1)          # C on lanes
+            f = _pad_lanes(f, -2, mult=8)             # W on sublanes
+            out = _ga.gather_blocks(f, idx, interpret=not _on_tpu())
+            return out[..., :c_out]
+        return _ref.gather_blocks(window_feats, idx)
+
+    return _chunked(run, (window_feats, idx), chunk)
+
+
 def fractal_level_blocks(coords, mask, mid, *, da: int, db: int,
-                         impl: str = "pallas"):
+                         impl: str | None = None, chunk: int | None = None):
     """coords (NB,BS,3), mask (NB,BS), mid (NB,) ->
     (side (NB,BS) i32, left_count (NB,), child_stats (NB,4))."""
+    return _fractal_level_blocks(coords, mask, mid, da=da, db=db,
+                                 impl=resolve_impl(impl), chunk=chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("da", "db", "impl", "chunk"))
+def _fractal_level_blocks(coords, mask, mid, *, da, db, impl, chunk):
     bs = coords.shape[1]
-    c, m = _to_lane_major(coords, mask)
-    if impl == "pallas":
-        side, lcnt, stats = _fe.fractal_level_blocks(
-            c, m, mid[:, None], da=da, db=db, interpret=not _on_tpu())
-    else:
-        side, lcnt, stats = _ref.fractal_level_blocks(
-            c, m, mid[:, None], da=da, db=db)
-    return side[:, :bs], lcnt, stats
+
+    def run(coords, mask, mid):
+        c, m = _to_lane_major(coords, mask)
+        if impl == "pallas":
+            side, lcnt, stats = _fe.fractal_level_blocks(
+                c, m, mid[:, None], da=da, db=db, interpret=not _on_tpu())
+        else:
+            side, lcnt, stats = _ref.fractal_level_blocks(
+                c, m, mid[:, None], da=da, db=db)
+        return side[:, :bs], lcnt, stats
+
+    return _chunked(run, (coords, mask, mid), chunk)

@@ -280,6 +280,8 @@ def main(argv=None):
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--no-metrics", action="store_true")
+    ap.add_argument("--impl", default=None, choices=["xla", "pallas"],
+                    help="point-op execute backend for the PNN cells")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -308,7 +310,8 @@ def main(argv=None):
         for arch, shape in cells:
             try:
                 if arch in PNN_VARIANTS:
-                    rows.append(run_pnn_cell(arch, shape, multi_pod=mp))
+                    rows.append(run_pnn_cell(arch, shape, multi_pod=mp,
+                                             impl=args.impl))
                 else:
                     rows.append(run_cell(arch, shape, multi_pod=mp,
                                          metrics=not args.no_metrics))

@@ -4,7 +4,7 @@ The cell lowers a *serving* step (the paper is an inference accelerator):
 Fractal partition -> BPPO point ops -> PNN feature stages, for PointNeXt
 segmentation at S3DIS scale (33K / 289K points, paper Figs. 13/15/18).
 Sharding: clouds -> ``data``, fractal leaves -> ``model`` (the paper's
-inter-block parallelism promoted to chips; DESIGN.md §6).
+inter-block parallelism promoted to chips; docs/DESIGN.md §6).
 
 Called from dryrun.py via ``--arch pointnext --shape pnn_289k``.
 """
@@ -69,7 +69,8 @@ def _model_flops(cfg: pnn.PNNConfig, n: int, batch: int, params) -> float:
 
 def run_pnn_cell(variant: str, shape_name: str, *, multi_pod: bool = False,
                  verbose: bool = True, rules=None, leaf_chunk: int = 512,
-                 point_ops: str = "bppo", batch: int | None = None):
+                 point_ops: str = "bppo", impl: str | None = None,
+                 batch: int | None = None):
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
     chips = mesh.devices.size
@@ -77,7 +78,7 @@ def run_pnn_cell(variant: str, shape_name: str, *, multi_pod: bool = False,
     if batch is not None:
         shape = dataclasses.replace(shape, batch=batch)
     cfg = PNN_VARIANTS[variant](n=shape.n_points, point_ops=point_ops,
-                                th=shape.th)
+                                th=shape.th, impl=impl)
     cfg = dataclasses.replace(cfg, leaf_chunk=leaf_chunk)
 
     t0 = time.time()

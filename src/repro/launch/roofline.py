@@ -141,6 +141,8 @@ class Roofline:
 
 def analyze(compiled, *, arch, shape, mesh_name, chips, model_flops):
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else {}
     hlo_flops = float(ca.get("flops", 0.0))
     hlo_bytes = float(ca.get("bytes accessed", 0.0))
     by_kind, count = parse_collectives(compiled.as_text())

@@ -1,6 +1,6 @@
 """GQA attention (full/prefill and decode-with-cache paths).
 
-Sharding (baseline v0, DESIGN.md §6): *sequence-parallel* attention — the
+Sharding (baseline v0, docs/DESIGN.md §6): *sequence-parallel* attention — the
 query sequence is sharded over the ``model`` mesh axis for train/prefill and
 the KV-cache sequence for decode.  This is uniform over every head count
 (9-head smollm and 64-head chameleon alike), at the cost of per-layer KV

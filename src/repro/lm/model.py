@@ -9,7 +9,7 @@ from outside the scan (true cross-rep sharing); their *caches* stay per-rep.
 
 Decode caches are pytrees stacked over reps and threaded through the scan as
 xs/ys.  The LM head loss is vocab-sharded + sequence-chunked (never
-materializes (tokens, vocab) logits; DESIGN.md §6).
+materializes (tokens, vocab) logits; docs/DESIGN.md §6).
 """
 from __future__ import annotations
 

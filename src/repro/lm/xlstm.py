@@ -5,7 +5,7 @@ The mLSTM chunkwise form is flash-attention-style: within a chunk the
 exp-input-gate/sigmoid-forget-gate products are evaluated in log space with
 a per-row running stabilizer; across chunks a scan carries (C, n, m) per
 head.  Structurally faithful simplifications vs the reference blocks are
-listed in DESIGN.md §5 (xlstm row).
+listed in docs/DESIGN.md §5 (xlstm row).
 """
 from __future__ import annotations
 

@@ -8,7 +8,13 @@ Point operations are selectable:
 * ``point_ops="bppo"``   — Fractal partition + block-parallel ops (the
                            paper's contribution, core/bppo.py).
 
-Variants (simplified but structurally faithful; see DESIGN.md §8):
+With ``point_ops="bppo"`` the execute phase of every point op additionally
+dispatches through the kernel backend selected by ``PNNConfig.impl``:
+``"xla"`` (jnp oracle, differentiable) or ``"pallas"`` (TPU kernels,
+interpret off-TPU, inference-only); ``None`` resolves from
+``$REPRO_POINT_IMPL``.  See docs/DESIGN.md §4.
+
+Variants (simplified but structurally faithful; see docs/DESIGN.md §8):
 * ``pointnet2``   — SA = group -> shared MLP -> max-pool.
 * ``pointnext``   — SA + inverted-residual MLP blocks after aggregation.
 * ``pointvector`` — SA with learned per-neighbor vector gating before pool.
@@ -50,6 +56,8 @@ class PNNConfig:
     fp_widths: tuple = ((128, 64), (64, 64))   # seg only, reversed order
     head_widths: tuple = (128,)
     point_ops: str = "global"        # global | bppo
+    impl: str | None = None          # bppo execute backend: xla | pallas |
+                                     # None ($REPRO_POINT_IMPL, then xla)
     th: int = 64                     # Fractal threshold (paper: 64 cls /
                                      # 256 seg at full scale)
     num_blocks: int = 1              # extra residual blocks (pointnext)
@@ -124,23 +132,24 @@ def _stage_points(cfg: PNNConfig, stage: SAStage, coords, feats, valid,
         gmask = gmask.at[:, 0].set(svalid)  # nearest pad always present
         rel = coords[nidx] - centers[:, None, :]
         gfeats = jnp.concatenate([rel, feats[nidx]], axis=-1)
-        ctx = {"mode": "global", "coords": coords, "feats": feats,
-               "valid": valid, "centers": centers, "svalid": svalid}
+        ctx = {"mode": "global", "coords": coords, "centers": centers,
+               "svalid": svalid}
         return centers, gfeats, gmask, svalid, ctx
 
     part = core.partition(coords, valid, th=cfg.th)
-    samp = core.blockwise_fps(part, rate=stage.rate, k_out=n_out, bs=cfg.th)
+    samp = core.blockwise_fps(part, rate=stage.rate, k_out=n_out, bs=cfg.th,
+                              impl=cfg.impl)
     nb = core.blockwise_ball_query(part, samp, radius=stage.radius,
                                    num=stage.nsample, w=2 * cfg.th,
-                                   chunk=cfg.leaf_chunk)
+                                   chunk=cfg.leaf_chunk, impl=cfg.impl)
     feats_sorted = feats[part.perm]
     centers = samp.coords
-    rel = part.coords[nb.idx] - centers[:, None, :]
+    rel = core.gather(part.coords, nb.idx) - centers[:, None, :]
     gmask = nb.mask
     gmask = gmask.at[:, 0].set(samp.valid)
-    gfeats = jnp.concatenate([rel, feats_sorted[nb.idx]], axis=-1)
-    ctx = {"mode": "bppo", "part": part, "samp": samp,
-           "feats_sorted": feats_sorted}
+    gfeats = jnp.concatenate([rel, core.gather(feats_sorted, nb.idx)],
+                             axis=-1)
+    ctx = {"mode": "bppo", "part": part, "samp": samp}
     return centers, gfeats, gmask, samp.valid, ctx
 
 
@@ -153,7 +162,8 @@ def _propagate(cfg: PNNConfig, ctx, coarse_feats, fine_feats, fine_valid):
     part, samp = ctx["part"], ctx["samp"]
     wc = max(16, int(2 * cfg.th * cfg.stages[0].rate))
     out_sorted, _, _ = core.blockwise_interpolate(
-        part, samp, coarse_feats, wc=wc, bs=cfg.th, chunk=cfg.leaf_chunk)
+        part, samp, coarse_feats, wc=wc, bs=cfg.th, chunk=cfg.leaf_chunk,
+        impl=cfg.impl)
     fine_sorted = fine_feats[part.perm]
     merged = jnp.concatenate([out_sorted, fine_sorted], axis=-1)
     # back to the fine cloud's original order
@@ -259,26 +269,27 @@ def apply(params, cfg: PNNConfig, coords: Array, feats: Array | None = None,
 
 # Paper Table I model presets -------------------------------------------------
 
-def pointnet2_cls(n=1024, point_ops="global", th=64):
+def pointnet2_cls(n=1024, point_ops="global", th=64, impl=None):
     return PNNConfig(name="pointnet2_cls", variant="pointnet2", task="cls",
-                     n_points=n, point_ops=point_ops, th=th)
+                     n_points=n, point_ops=point_ops, th=th, impl=impl)
 
 
-def pointnext_cls(n=1024, point_ops="global", th=64):
+def pointnext_cls(n=1024, point_ops="global", th=64, impl=None):
     return PNNConfig(name="pointnext_cls", variant="pointnext", task="cls",
-                     n_points=n, point_ops=point_ops, th=th)
+                     n_points=n, point_ops=point_ops, th=th, impl=impl)
 
 
-def pointnet2_seg(n=2048, point_ops="global", th=256):
+def pointnet2_seg(n=2048, point_ops="global", th=256, impl=None):
     return PNNConfig(name="pointnet2_seg", variant="pointnet2", task="seg",
-                     n_points=n, point_ops=point_ops, th=th)
+                     n_points=n, point_ops=point_ops, th=th, impl=impl)
 
 
-def pointnext_seg(n=2048, point_ops="global", th=256):
+def pointnext_seg(n=2048, point_ops="global", th=256, impl=None):
     return PNNConfig(name="pointnext_seg", variant="pointnext", task="seg",
-                     n_points=n, point_ops=point_ops, th=th)
+                     n_points=n, point_ops=point_ops, th=th, impl=impl)
 
 
-def pointvector_seg(n=2048, point_ops="global", th=256):
+def pointvector_seg(n=2048, point_ops="global", th=256, impl=None):
     return PNNConfig(name="pointvector_seg", variant="pointvector",
-                     task="seg", n_points=n, point_ops=point_ops, th=th)
+                     task="seg", n_points=n, point_ops=point_ops, th=th,
+                     impl=impl)

@@ -1,13 +1,14 @@
-"""Unit tests for dist helpers: bppo._leaf_chunks padding/reshape
-invariants and logical.lc inside vs outside a logical_rules context."""
+"""Unit tests for dist helpers: the dispatch layer's leaf_chunks
+padding/reshape invariants and logical.lc inside vs outside a
+logical_rules context."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.core import bppo
 from repro.dist import logical
+from repro.kernels import ops as kops
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -15,16 +16,16 @@ jax.config.update("jax_platform_name", "cpu")
 class TestLeafChunks:
     def test_even_split_no_padding(self):
         a = jnp.arange(12.0).reshape(12, 1)
-        (c,), ml, pad = bppo._leaf_chunks((a,), 4)
-        assert (ml, pad) == (12, 0)
+        (c,), ml = kops.leaf_chunks((a,), 4)
+        assert ml == 12
         assert c.shape == (3, 4, 1)
         np.testing.assert_array_equal(np.asarray(c.reshape(12, 1)),
                                       np.asarray(a))
 
     def test_odd_leaf_count_pads_with_zeros(self):
         a = jnp.arange(1.0, 8.0)          # 7 leaves, chunk 3 -> pad 2
-        (c,), ml, pad = bppo._leaf_chunks((a,), 3)
-        assert (ml, pad) == (7, 2)
+        (c,), ml = kops.leaf_chunks((a,), 3)
+        assert ml == 7
         assert c.shape == (3, 3)
         flat = np.asarray(c.reshape(-1))
         np.testing.assert_array_equal(flat[:7], np.arange(1.0, 8.0))
@@ -32,8 +33,8 @@ class TestLeafChunks:
 
     def test_chunk_larger_than_ml(self):
         a = jnp.ones((5, 2, 3))
-        (c,), ml, pad = bppo._leaf_chunks((a,), 8)
-        assert (ml, pad) == (5, 3)
+        (c,), ml = kops.leaf_chunks((a,), 8)
+        assert ml == 5
         assert c.shape == (1, 8, 2, 3)
         # trailing dims are never padded
         np.testing.assert_array_equal(np.asarray(c[0, :5]), np.asarray(a))
@@ -41,8 +42,8 @@ class TestLeafChunks:
 
     def test_multiple_arrays_share_layout(self):
         arrays = (jnp.arange(10.0), jnp.ones((10, 4), bool))
-        out, ml, pad = bppo._leaf_chunks(arrays, 4)
-        assert ml == 10 and pad == 2
+        out, ml = kops.leaf_chunks(arrays, 4)
+        assert ml == 10
         assert out[0].shape == (3, 4) and out[1].shape == (3, 4, 4)
         # un-chunk + strip padding round-trips every array
         for orig, chunked in zip(arrays, out):
@@ -50,13 +51,12 @@ class TestLeafChunks:
             np.testing.assert_array_equal(np.asarray(back), np.asarray(orig))
 
     def test_roundtrip_matches_chunked_map(self):
-        # the bppo usage pattern: lax.map over chunks == direct computation
+        # the dispatch usage pattern: lax.map over chunks == direct compute
         a = jnp.arange(7.0)
-        chunks, ml, _ = bppo._leaf_chunks((a,), 2)
+        chunks, ml = kops.leaf_chunks((a,), 2)
         y = jax.lax.map(lambda s: s[0] * 2.0, chunks)
         np.testing.assert_array_equal(np.asarray(y.reshape(-1)[:ml]),
                                       np.asarray(a) * 2.0)
-
 
 class TestLogicalConstraint:
     def test_lc_outside_context_is_identity(self):

@@ -1,0 +1,133 @@
+"""Backend-dispatch parity: impl="pallas" (interpret) vs the kernels/ref.py
+oracle through the one public dispatch layer (kernels/ops.py), at
+non-lane-multiple block sizes, with empty blocks and all-invalid masks —
+plus end-to-end pnn.apply equivalence between the two backends."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.kernels import ops
+from repro.models import pnn
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Deliberately off the 128-lane / 8-sublane boundaries.
+ODD_SHAPES = [(3, 65), (2, 200), (5, 33)]
+
+
+def blocks(seed, nb, bs, empty_blocks=0, all_invalid=False):
+    """Random blocks; the first ``empty_blocks`` blocks have zero valid
+    points, and ``all_invalid`` masks out every point everywhere."""
+    rng = np.random.default_rng(seed)
+    coords = rng.normal(0, 1, (nb, bs, 3)).astype(np.float32)
+    nvalid = rng.integers(1, bs + 1, nb)
+    nvalid[:empty_blocks] = 0
+    if all_invalid:
+        nvalid[:] = 0
+    mask = np.arange(bs)[None, :] < nvalid[:, None]
+    return jnp.asarray(coords), jnp.asarray(mask)
+
+
+def both(fn):
+    return fn("pallas"), fn("xla")
+
+
+@pytest.mark.parametrize("nb,bs", ODD_SHAPES)
+@pytest.mark.parametrize("empty,invalid", [(0, False), (1, False),
+                                           (0, True)])
+def test_fps_parity(nb, bs, empty, invalid):
+    coords, mask = blocks(0, nb, bs, empty, invalid)
+    a, b = both(lambda i: ops.fps_blocks(coords, mask, k=7, impl=i))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("nb,w", ODD_SHAPES)
+@pytest.mark.parametrize("empty,invalid", [(0, False), (1, False),
+                                           (0, True)])
+def test_ball_query_parity(nb, w, empty, invalid):
+    win, wmask = blocks(1, nb, w, empty, invalid)
+    centers, cmask = blocks(2, nb, 13, empty, invalid)   # kc=13: odd too
+    a, b = both(lambda i: ops.ball_query_blocks(
+        centers, cmask, win, wmask, radius=0.8, num=5, impl=i))
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-5)
+    assert a[0].shape == (nb, 13, 5)      # sliced back, not lane-padded
+
+
+@pytest.mark.parametrize("nb,w", ODD_SHAPES)
+@pytest.mark.parametrize("empty,invalid", [(0, False), (1, False),
+                                           (0, True)])
+def test_knn_parity(nb, w, empty, invalid):
+    win, wmask = blocks(3, nb, w, empty, invalid)
+    queries, _ = blocks(4, nb, 11)
+    a, b = both(lambda i: ops.knn_blocks(queries, win, wmask, k=3, impl=i))
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-5)
+    assert a[0].shape == (nb, 11, 3)
+
+
+@pytest.mark.parametrize("nb,w", ODD_SHAPES)
+def test_gather_parity(nb, w):
+    rng = np.random.default_rng(5)
+    feats = jnp.asarray(rng.normal(0, 1, (nb, w, 9)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, w, (nb, 17)), jnp.int32)
+    a, b = both(lambda i: ops.gather_blocks(feats, idx, impl=i))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    assert a.shape == (nb, 17, 9)
+
+
+@pytest.mark.parametrize("nb,bs", ODD_SHAPES)
+@pytest.mark.parametrize("empty,invalid", [(0, False), (1, False),
+                                           (0, True)])
+def test_fractal_level_parity(nb, bs, empty, invalid):
+    coords, mask = blocks(6, nb, bs, empty, invalid)
+    mid = jnp.asarray(np.random.default_rng(7).normal(0, 0.5, (nb,)),
+                      jnp.float32)
+    a, b = both(lambda i: ops.fractal_level_blocks(coords, mask, mid,
+                                                   da=0, db=1, impl=i))
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_chunked_dispatch_matches_unchunked(impl):
+    win, wmask = blocks(8, 7, 65, empty_blocks=1)
+    centers, cmask = blocks(9, 7, 9)
+    a = ops.ball_query_blocks(centers, cmask, win, wmask, radius=0.8,
+                              num=4, impl=impl, chunk=3)
+    b = ops.ball_query_blocks(centers, cmask, win, wmask, radius=0.8,
+                              num=4, impl=impl)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_resolve_impl(monkeypatch):
+    monkeypatch.delenv("REPRO_POINT_IMPL", raising=False)
+    assert ops.resolve_impl("xla") == "xla"
+    assert ops.resolve_impl(None, default="pallas") == "pallas"
+    monkeypatch.setenv("REPRO_POINT_IMPL", "xla")
+    assert ops.resolve_impl(None, default="pallas") == "xla"
+    assert ops.resolve_impl("pallas") == "pallas"  # explicit arg wins
+    with pytest.raises(ValueError, match="impl"):
+        ops.resolve_impl("cuda")
+
+
+@pytest.mark.parametrize("task,n,th", [("cls", 256, 32), ("seg", 384, 64)])
+def test_pnn_apply_pallas_matches_xla(task, n, th):
+    """End-to-end: the full BPPO pipeline produces the same logits through
+    the Pallas kernels (interpret) as through the jnp oracle."""
+    cfg = pnn.PNNConfig(variant="pointnet2", task=task, n_points=n,
+                        point_ops="bppo", th=th)
+    import dataclasses
+    params = pnn.init(jax.random.PRNGKey(0), cfg)
+    batch = (synthetic.classification_batch if task == "cls"
+             else synthetic.segmentation_batch)
+    pts, _ = batch(0, 0, 1, n)
+    a = pnn.apply(params, dataclasses.replace(cfg, impl="pallas"), pts[0])
+    b = pnn.apply(params, dataclasses.replace(cfg, impl="xla"), pts[0])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
