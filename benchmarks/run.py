@@ -12,6 +12,10 @@ trajectory is tracked across PRs.
   threshold      -> paper Fig. 17 (th trade-off)
   accuracy       -> paper Fig. 14 (network accuracy, global vs BPPO)
   kernels        -> paper §VI-C RSPU ablation (reuse model + verification)
+  serve          -> deployment path: bucketed serving latency/throughput
+                    (docs/DESIGN.md §9; both impls unless --impl is given)
+
+See benchmarks/README.md for the BENCH_<suite>.json schema.
 """
 from __future__ import annotations
 
@@ -38,7 +42,7 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: partitioning,point_ops,threshold,"
-                         "accuracy,kernels")
+                         "accuracy,kernels,serve")
     ap.add_argument("--impl", default=None, choices=["xla", "pallas"],
                     help="point-op execute backend for kernel-dispatching "
                          "suites (default: $REPRO_POINT_IMPL or xla)")
@@ -48,13 +52,14 @@ def main(argv=None) -> None:
     quick = not args.full
 
     from benchmarks import (accuracy, common, kernels_bench, partitioning,
-                            point_ops, threshold)
+                            point_ops, serve_bench, threshold)
     suites = {
         "partitioning": partitioning.run,
         "point_ops": point_ops.run,
         "threshold": threshold.run,
         "accuracy": accuracy.run,
         "kernels": kernels_bench.run,
+        "serve": serve_bench.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")

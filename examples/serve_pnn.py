@@ -1,68 +1,84 @@
-"""Batched point-cloud segmentation serving — the paper's deployment mode.
+"""Batched point-cloud segmentation serving — thin client of ``repro.serve``.
 
-A request queue of LiDAR-scale clouds flows through the Fractal pipeline
-(partition -> BPPO -> PNN) in fixed-size batches; reports per-cloud latency
-and sustained throughput.
+A mixed-size request stream flows through the serving subsystem
+(docs/DESIGN.md §9): each cloud is padded to its minimal shape bucket, a
+per-bucket queue packs fixed microbatches under a max-wait deadline, and a
+plan cache keeps exactly one fractal-partition plan per (bucket, th,
+strategy) and one compiled forward per (bucket, impl).  Compile happens in
+``warm()`` — *before* the stream — so reported latencies never include it.
 
-Run:  PYTHONPATH=src python examples/serve_pnn.py [--n 8192] [--requests 32]
+Run:  PYTHONPATH=src python examples/serve_pnn.py \
+          [--buckets 1024,4096] [--requests 16] [--impl pallas] [--mesh auto]
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
+from repro import serve
 from repro.data import synthetic
-from repro.models import pnn
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=4096)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--buckets", default="1024,4096",
+                    help="comma-separated shape-bucket ladder")
     ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument("--max-wait-ms", type=float, default=20.0)
     ap.add_argument("--th", type=int, default=256)
+    ap.add_argument("--variant", default="pointnext",
+                    choices=["pointnet2", "pointnext", "pointvector"])
     ap.add_argument("--point-ops", default="bppo",
                     choices=["bppo", "global"])
     ap.add_argument("--impl", default=None, choices=["xla", "pallas"],
                     help="bppo execute backend (default: $REPRO_POINT_IMPL"
                          " or xla)")
+    ap.add_argument("--mesh", default="none", choices=["none", "auto"],
+                    help="auto: shard microbatches over the elastic host "
+                         "mesh (repro.dist)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = pnn.pointnext_seg(n=args.n, point_ops=args.point_ops, th=args.th,
-                            impl=args.impl)
-    params = pnn.init(jax.random.PRNGKey(0), cfg)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    cfg = serve.ServeConfig(
+        buckets=buckets, microbatch=args.microbatch,
+        max_wait_s=args.max_wait_ms / 1e3, variant=args.variant,
+        th=args.th, point_ops=args.point_ops, impl=args.impl,
+        mesh=args.mesh)
+    engine = serve.ServeEngine(cfg, seed=args.seed)
 
-    @jax.jit
-    def serve(params, clouds):
-        return jax.vmap(lambda c: pnn.apply(params, cfg, c))(clouds)
+    compile_s = engine.warm()
+    print(f"warmed {len(compile_s)} buckets "
+          f"({args.point_ops} point ops, impl={engine.impl}, th={args.th}, "
+          f"mesh={args.mesh}): "
+          + ", ".join(f"n={b} in {s:.1f}s" for b, s in compile_s.items())
+          + "  [excluded from latencies]")
 
-    # Warmup (compile)
-    clouds, _ = synthetic.segmentation_batch(0, 0, args.batch, args.n)
-    t0 = time.time()
-    serve(params, clouds).block_until_ready()
-    print(f"compiled in {time.time() - t0:.1f}s "
-          f"({args.point_ops} point ops, impl={args.impl or 'default'}, "
-          f"n={args.n}, th={args.th})")
+    sizes = serve.mixed_request_sizes(buckets, args.requests, args.seed)
+    expect = {}
+    for r, n in enumerate(sizes):
+        clouds, _ = synthetic.segmentation_batch(args.seed, r, 1, n)
+        rid = engine.submit(clouds[0])
+        expect[rid] = n
+        for done in engine.step():
+            # pop-on-read; sanity: per-point logits for the real points
+            assert engine.take(done).shape == (expect.pop(done),
+                                               cfg.num_classes)
+    for done in engine.flush():
+        assert engine.take(done).shape == (expect.pop(done),
+                                           cfg.num_classes)
 
-    done, lat = 0, []
-    t_start = time.time()
-    for r in range(args.requests // args.batch):
-        clouds, _ = synthetic.segmentation_batch(0, r + 1, args.batch,
-                                                 args.n)
-        t0 = time.time()
-        out = serve(params, clouds)
-        out.block_until_ready()
-        lat.append(time.time() - t0)
-        done += args.batch
-        # sanity: segmentation logits per point
-        assert out.shape == (args.batch, args.n, cfg.num_classes)
-    wall = time.time() - t_start
-    print(f"served {done} clouds x {args.n} pts: "
-          f"p50 latency {np.percentile(lat, 50) * 1e3:.1f} ms/batch, "
-          f"throughput {done / wall:.2f} clouds/s "
-          f"({done * args.n / wall / 1e6:.2f} Mpts/s)")
+    st = engine.stats()
+    print(f"served {st['served']} clouds in {st['wall_s']:.2f}s: "
+          f"{st['clouds_per_s']:.2f} clouds/s "
+          f"({st['mpts_per_s']:.3g} Mpts/s)")
+    for b, row in sorted(st["buckets"].items()):
+        print(f"  bucket n={b}: {row['count']} clouds, "
+              f"p50 {row['p50_ms']:.1f} / p95 {row['p95_ms']:.1f} / "
+              f"p99 {row['p99_ms']:.1f} ms")
+    pc = st["plan_cache"]
+    print(f"plan cache: {pc['executables']} executables, "
+          f"{pc['hits']} hits, {pc['misses']} misses "
+          f"(one trace per key: "
+          f"{all(v == 1 for v in pc['traces'].values())})")
 
 
 if __name__ == "__main__":

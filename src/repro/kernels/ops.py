@@ -77,6 +77,32 @@ def _to_lane_major(coords, mask):
     return c, m
 
 
+def pad_points(coords, n: int, valid=None):
+    """Admission-time bucket padding: grow a ``(..., p, 3)`` cloud to exactly
+    ``n`` points, marking the tail invalid.
+
+    The serving layer's analogue of this module's lane padding (see
+    docs/DESIGN.md §9): padded slots carry a ``False`` mask and are never
+    observed, so every cloud admitted to a shape bucket hits the one cached
+    executable compiled for that bucket.  Returns ``(coords, valid)`` with
+    shapes ``(..., n, 3)`` / ``(..., n)``.
+    """
+    p = coords.shape[-2]
+    if n < p:
+        raise ValueError(f"cannot pad {p} points down to {n}")
+    if valid is None:
+        valid = jnp.ones(coords.shape[:-1], bool)
+    pad = n - p
+    if pad:
+        wc = [(0, 0)] * coords.ndim
+        wc[-2] = (0, pad)
+        coords = jnp.pad(coords, wc)
+        wv = [(0, 0)] * valid.ndim
+        wv[-1] = (0, pad)
+        valid = jnp.pad(valid, wv)
+    return coords, valid
+
+
 def leaf_chunks(arrays, chunk):
     """Pad leading (block) dims to a chunk multiple and reshape to
     (n_chunks, chunk, ...) for lax.map/scan over block chunks.  Returns

@@ -60,6 +60,8 @@ class PNNConfig:
                                      # None ($REPRO_POINT_IMPL, then xla)
     th: int = 64                     # Fractal threshold (paper: 64 cls /
                                      # 256 seg at full scale)
+    strategy: str = "fractal"        # partition strategy, every stage
+                                     # (core/fractal.py STRATEGIES)
     num_blocks: int = 1              # extra residual blocks (pointnext)
     leaf_chunk: int | None = None    # leaves per lax.map step (large scale)
 
@@ -114,12 +116,15 @@ def _mlp(params, x):
 # ---------------------------------------------------------------------------
 
 def _stage_points(cfg: PNNConfig, stage: SAStage, coords, feats, valid,
-                  n_out):
+                  n_out, part=None):
     """Returns (new_coords (n_out,3), grouped (n_out, nsample, C+3),
     gmask, new_valid, ctx) running one sampling+grouping+gathering round.
 
     ``ctx`` carries what propagation needs (partition/samples for bppo,
-    nothing for global)."""
+    nothing for global).  ``part`` optionally supplies a precomputed
+    FractalPartition of (coords, valid) — the serving plan cache
+    (docs/DESIGN.md §9) partitions once per shape bucket and passes the
+    plan in, so only the execute phase runs per request batch."""
     n = coords.shape[0]
     if cfg.point_ops == "global":
         sidx, svalid = ref.fps(coords, valid, n_out)
@@ -136,7 +141,9 @@ def _stage_points(cfg: PNNConfig, stage: SAStage, coords, feats, valid,
                "svalid": svalid}
         return centers, gfeats, gmask, svalid, ctx
 
-    part = core.partition(coords, valid, th=cfg.th)
+    if part is None:
+        part = core.partition(coords, valid, th=cfg.th,
+                              strategy=cfg.strategy)
     samp = core.blockwise_fps(part, rate=stage.rate, k_out=n_out, bs=cfg.th,
                               impl=cfg.impl)
     nb = core.blockwise_ball_query(part, samp, radius=stage.radius,
@@ -228,11 +235,15 @@ def _aggregate(cfg, stage_p, gfeats, gmask, variant):
 
 
 def apply(params, cfg: PNNConfig, coords: Array, feats: Array | None = None,
-          valid: Array | None = None):
+          valid: Array | None = None, part0=None):
     """Single-cloud forward (vmap for batches).
 
     cls: returns (num_classes,) logits.
     seg: returns (n, num_classes) per-point logits.
+
+    ``part0`` optionally injects a precomputed stage-0 FractalPartition of
+    (coords, valid) (bppo only; ignored for global ops) — the serving plan
+    cache builds it once per shape bucket (docs/DESIGN.md §9).
     """
     n = coords.shape[0]
     if valid is None:
@@ -244,7 +255,8 @@ def apply(params, cfg: PNNConfig, coords: Array, feats: Array | None = None,
     ctxs = []
     for i, s in enumerate(cfg.stages):
         centers, gfeats, gmask, svalid, ctx = _stage_points(
-            cfg, s, skips[-1][0], skips[-1][1], skips[-1][2], sizes[i + 1])
+            cfg, s, skips[-1][0], skips[-1][1], skips[-1][2], sizes[i + 1],
+            part=part0 if i == 0 else None)
         pooled = _aggregate(cfg, params["stages"][i], gfeats, gmask,
                             cfg.variant)
         ctxs.append(ctx)

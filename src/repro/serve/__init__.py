@@ -1,0 +1,19 @@
+"""repro.serve — shape-bucketed, plan-cached PNN serving (DESIGN.md §9).
+
+Admission pads clouds to shape buckets, a per-bucket queue packs fixed
+microbatches under a max-wait deadline, and a plan cache keeps exactly one
+fractal-partition plan per (bucket, th, strategy) and one forward
+executable per (bucket, impl).  ``examples/serve_pnn.py`` is the thin
+client; ``benchmarks/serve_bench.py`` is the perf harness.
+"""
+from repro.serve.batching import MicroBatch, MicroBatchQueue, Request
+from repro.serve.bucketing import (DEFAULT_BUCKETS, BucketPolicy,
+                                   mixed_request_sizes)
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.plan_cache import PlanCache
+
+__all__ = [
+    "BucketPolicy", "DEFAULT_BUCKETS", "MicroBatch", "MicroBatchQueue",
+    "PlanCache", "Request", "ServeConfig", "ServeEngine",
+    "mixed_request_sizes",
+]

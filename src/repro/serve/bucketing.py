@@ -1,0 +1,62 @@
+"""Shape-bucketed admission (docs/DESIGN.md §9).
+
+Incoming clouds have arbitrary point counts; every distinct count would be
+a fresh ``jax.jit`` trace + XLA compile.  Admission therefore pads each
+cloud up to the *minimal fitting* bucket from a small configured ladder
+(e.g. n in {4096, 16384, 65536}) with the tail masked invalid — the same
+masking contract the kernel layer uses for lane padding
+(``kernels.ops.pad_points``) — so the executable cache stays bounded at
+one entry per (bucket, impl) no matter what the request stream looks like.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.kernels import ops as kops
+
+DEFAULT_BUCKETS = (4096, 16384, 65536)
+
+
+def mixed_request_sizes(buckets, requests: int, seed: int = 0):
+    """A representative mixed-size request stream for demos/benchmarks:
+    ``n`` drawn uniformly from each bucket's full size and ~70% size, so
+    every bucket sees exact fits and padded admissions."""
+    sizes = sorted({n for b in buckets for n in (b, max(1, int(0.7 * b)))})
+    rng = np.random.default_rng(seed)
+    return [int(rng.choice(sizes)) for _ in range(requests)]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """An ascending ladder of admissible cloud sizes."""
+
+    buckets: tuple = DEFAULT_BUCKETS
+
+    def __post_init__(self):
+        b = tuple(sorted(set(int(x) for x in self.buckets)))
+        if not b or b[0] <= 0:
+            raise ValueError(f"buckets must be positive, got {self.buckets}")
+        object.__setattr__(self, "buckets", b)
+
+    @property
+    def max_points(self) -> int:
+        return self.buckets[-1]
+
+    def select(self, n: int) -> int:
+        """Minimal bucket that fits an ``n``-point cloud."""
+        if n <= 0:
+            raise ValueError(f"need a non-empty cloud, got n={n}")
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"cloud with {n} points exceeds the largest "
+                         f"bucket {self.buckets[-1]}")
+
+    def pad(self, coords, valid=None):
+        """Admit one ``(p, 3)`` cloud: returns (bucket, coords', valid')
+        padded to the selected bucket with the tail masked invalid."""
+        bucket = self.select(coords.shape[-2])
+        coords, valid = kops.pad_points(coords, bucket, valid)
+        return bucket, coords, valid

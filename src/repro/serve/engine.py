@@ -1,0 +1,258 @@
+"""The PNN serving engine: admission -> queue -> plan cache -> dispatch.
+
+One engine owns the whole deployment path of docs/DESIGN.md §9:
+
+* admission pads each cloud to its minimal shape bucket (``bucketing``);
+* a per-bucket microbatch queue packs requests under a max-wait deadline
+  (``batching``); partial batches are padded with all-invalid clouds so
+  executable shapes never vary;
+* a plan cache holds one jitted fractal-partition plan per
+  (bucket, th, strategy) and one jitted forward per (bucket, impl)
+  (``plan_cache``) — the plan phase is traced once per bucket, not once
+  per request batch, mirroring the bppo plan/execute split (§4);
+* microbatches optionally shard over an elastic mesh via ``repro.dist``
+  (``elastic.make_mesh`` + ``logical.fit_specs``): clouds -> ``data``,
+  fractal leaves -> ``model`` (§6).
+
+The engine is synchronous and deterministic: time enters only through its
+clock (injectable for tests), and ``warm()`` compiles every executable
+up front so reported latencies never include compile time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro import core
+from repro.dist import elastic, logical
+from repro.kernels import ops as kops
+from repro.models import pnn
+from repro.serve.batching import MicroBatch, MicroBatchQueue
+from repro.serve.bucketing import DEFAULT_BUCKETS, BucketPolicy
+from repro.serve.plan_cache import PlanCache
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-time knobs (model structure + admission + dispatch)."""
+
+    buckets: tuple = DEFAULT_BUCKETS
+    microbatch: int = 4
+    max_wait_s: float = 0.02       # deadline for partial microbatches
+    variant: str = "pointnet2"     # pointnet2 | pointnext | pointvector
+    task: str = "seg"              # cls | seg
+    num_classes: int = 6
+    th: int = 256                  # fractal threshold (plan-cache key part)
+    strategy: str = "fractal"      # partition strategy (plan-cache key part)
+    point_ops: str = "bppo"        # bppo | global
+    impl: str | None = None        # xla | pallas | None ($REPRO_POINT_IMPL)
+    leaf_chunk: int | None = None
+    mesh: str = "none"             # none | auto (elastic host mesh)
+    model_axis: int = 2            # elastic mesh model-axis request
+
+
+class ServeEngine:
+    """Shape-bucketed, plan-cached PNN serving (DESIGN.md §9)."""
+
+    def __init__(self, cfg: ServeConfig, params=None, mesh=None, seed=0,
+                 clock=time.monotonic):
+        self.cfg = cfg
+        # Pinned once: flipping $REPRO_POINT_IMPL mid-serve must not
+        # bifurcate the executable cache.
+        self.impl = kops.resolve_impl(cfg.impl, default="xla")
+        self.policy = BucketPolicy(cfg.buckets)
+        self.queue = MicroBatchQueue(self.policy, cfg.microbatch,
+                                     cfg.max_wait_s)
+        self.plans = PlanCache()
+        self._clock = clock
+        if mesh is not None:
+            self.mesh = mesh
+        elif cfg.mesh == "auto":
+            self.mesh = elastic.make_mesh(model_axis=cfg.model_axis)
+        else:
+            self.mesh = None
+        self._base = pnn.PNNConfig(
+            name=f"serve_{cfg.variant}_{cfg.task}", variant=cfg.variant,
+            task=cfg.task, num_classes=cfg.num_classes,
+            n_points=self.policy.buckets[0], point_ops=cfg.point_ops,
+            th=cfg.th, strategy=cfg.strategy, impl=self.impl,
+            leaf_chunk=cfg.leaf_chunk)
+        self.params = (params if params is not None
+                       else pnn.init(jax.random.PRNGKey(seed), self._base))
+        self.results: dict[int, np.ndarray] = {}
+        self._lat: dict[int, list] = {b: [] for b in self.policy.buckets}
+        self.compile_s: dict[int, float] = {}
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+
+    # -- executables ------------------------------------------------------
+
+    def _model_cfg(self, bucket: int) -> pnn.PNNConfig:
+        return dataclasses.replace(self._base, n_points=bucket)
+
+    def _plan_fn(self, bucket: int):
+        key = ("plan", bucket, self.cfg.th, self.cfg.strategy)
+        th, strategy = self.cfg.th, self.cfg.strategy
+
+        def build():
+            def plan(clouds, valid):
+                return jax.vmap(lambda c, v: core.partition(
+                    c, v, th=th, strategy=strategy))(clouds, valid)
+            return plan
+
+        return self.plans.get(key, build)
+
+    def _serve_fn(self, bucket: int):
+        key = ("serve", bucket, self.impl)
+        mcfg = self._model_cfg(bucket)
+
+        if self.cfg.point_ops == "bppo":
+            def build():
+                def step(params, clouds, valid, part):
+                    clouds = logical.lc(clouds, "batch", "points", None)
+                    valid = logical.lc(valid, "batch", "points")
+                    return jax.vmap(lambda c, v, p: pnn.apply(
+                        params, mcfg, c, valid=v, part0=p))(clouds, valid,
+                                                            part)
+                return step
+        else:
+            def build():
+                def step(params, clouds, valid):
+                    clouds = logical.lc(clouds, "batch", "points", None)
+                    valid = logical.lc(valid, "batch", "points")
+                    return jax.vmap(lambda c, v: pnn.apply(
+                        params, mcfg, c, valid=v))(clouds, valid)
+                return step
+
+        return self.plans.get(key, build)
+
+    def _run(self, fn, *args):
+        """Call (and on first use, trace) ``fn`` under the mesh's logical
+        rules so ``lc`` constraints bake into the executable."""
+        if self.mesh is None:
+            return fn(*args)
+        with logical.logical_rules(self.mesh, logical.RULES_V0):
+            return fn(*args)
+
+    def _device_put_batch(self, clouds, valid):
+        """Shard one microbatch over the mesh: clouds -> the data axes,
+        specs fitted against actual shapes (non-dividing axes drop)."""
+        if self.mesh is None:
+            return clouds, valid
+        with logical.logical_rules(self.mesh, logical.RULES_V0):
+            sh = (NamedSharding(self.mesh,
+                                logical.spec(("batch", "points", None))),
+                  NamedSharding(self.mesh, logical.spec(("batch",
+                                                         "points"))))
+        sh = logical.fit_specs(sh, (clouds, valid), self.mesh)
+        return jax.device_put((clouds, valid), sh)
+
+    # -- serving ----------------------------------------------------------
+
+    def warm(self, buckets=None) -> dict[int, float]:
+        """Compile the plan + serve executables per bucket (zero-filled
+        microbatch), so request latencies exclude compile.  Returns
+        {bucket: compile_seconds}."""
+        for b in (buckets if buckets is not None else self.policy.buckets):
+            t0 = time.monotonic()
+            clouds = jnp.zeros((self.queue.microbatch, b, 3), jnp.float32)
+            valid = jnp.ones((self.queue.microbatch, b), bool)
+            jax.block_until_ready(self._forward(b, clouds, valid))
+            self.compile_s[b] = time.monotonic() - t0
+        return dict(self.compile_s)
+
+    def _forward(self, bucket, clouds, valid):
+        clouds, valid = self._device_put_batch(clouds, valid)
+        if self.cfg.point_ops == "bppo":
+            part = self._run(self._plan_fn(bucket), clouds, valid)
+            return self._run(self._serve_fn(bucket), self.params, clouds,
+                             valid, part)
+        return self._run(self._serve_fn(bucket), self.params, clouds, valid)
+
+    def submit(self, coords, now: float | None = None) -> int:
+        """Admit one (n, 3) cloud; returns the request id."""
+        now = self._clock() if now is None else now
+        coords = jnp.asarray(coords, jnp.float32)
+        req = self.queue.submit(coords, now)
+        if self._t_first is None:
+            self._t_first = now
+        return req.rid
+
+    def step(self, now: float | None = None) -> list[int]:
+        """Dispatch every microbatch that is ready at ``now`` (full, or
+        past its deadline).  Returns the completed request ids."""
+        now = self._clock() if now is None else now
+        done = []
+        for mb in self.queue.ready(now):
+            done.extend(self._execute(mb))
+        return done
+
+    def flush(self) -> list[int]:
+        """Drain the queue (end of stream), deadline or not."""
+        done = []
+        for mb in self.queue.drain():
+            done.extend(self._execute(mb))
+        return done
+
+    def take(self, rid: int, default=None):
+        """Pop a completed result (clients should prefer this over reading
+        ``results`` directly: a long-running engine must not accumulate
+        one array per request forever)."""
+        return self.results.pop(rid, default)
+
+    def _execute(self, mb: MicroBatch) -> list[int]:
+        bucket, reqs = mb.bucket, mb.requests
+        npad = self.queue.microbatch - len(reqs)
+        clouds = jnp.stack(
+            [r.coords for r in reqs]
+            + [jnp.zeros((bucket, 3), jnp.float32)] * npad)
+        valid = jnp.stack([r.valid for r in reqs]
+                          + [jnp.zeros((bucket,), bool)] * npad)
+        out = self._forward(bucket, clouds, valid)
+        jax.block_until_ready(out)
+        t_done = self._clock()
+        out = np.asarray(out)
+        rids = []
+        for i, r in enumerate(reqs):
+            res = out[i][:r.n] if self.cfg.task == "seg" else out[i]
+            self.results[r.rid] = res
+            self._lat[bucket].append((t_done - r.t_submit, r.n))
+            rids.append(r.rid)
+        self._t_last = t_done
+        return rids
+
+    # -- reporting --------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Per-bucket latency percentiles + sustained throughput + plan
+        cache counters (the BENCH_serve.json payload)."""
+        buckets = {}
+        served, points = 0, 0
+        wall = 0.0
+        if self._t_first is not None and self._t_last is not None:
+            wall = max(self._t_last - self._t_first, 1e-9)
+        for b, lat in self._lat.items():
+            if not lat:
+                continue
+            ls = np.asarray([l for l, _ in lat])
+            pts = int(sum(n for _, n in lat))
+            served += len(ls)
+            points += pts
+            buckets[b] = {
+                "count": len(ls),
+                "p50_ms": float(np.percentile(ls, 50) * 1e3),
+                "p95_ms": float(np.percentile(ls, 95) * 1e3),
+                "p99_ms": float(np.percentile(ls, 99) * 1e3),
+                "mean_ms": float(ls.mean() * 1e3),
+                "clouds_per_s": len(ls) / wall if wall else 0.0,
+                "compile_s": self.compile_s.get(b),
+            }
+        return {"impl": self.impl, "served": served, "wall_s": wall,
+                "clouds_per_s": served / wall if wall else 0.0,
+                "mpts_per_s": points / wall / 1e6 if wall else 0.0,
+                "buckets": buckets, "plan_cache": self.plans.stats()}

@@ -1,0 +1,58 @@
+"""Keyed cache of jitted serving executables with trace counters.
+
+``jax.jit`` already memoizes by input shape, but a serving system needs
+the cache to be *observable* (how many executables exist, did a request
+hit a warm one) and *bounded by construction* (keys are explicit tuples —
+``("plan", bucket, th, strategy)`` for the fractal partition plan,
+``("serve", bucket, impl)`` for the full forward — so admission bucketing
+caps the population).  The trace counter increments inside the traced
+Python body, i.e. exactly once per (re)trace; tests assert one compile
+per (bucket, impl) across a mixed-size request stream (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import collections
+
+import jax
+
+
+class PlanCache:
+    """get(key, build) -> jitted fn; build() returns the *unjitted* fn."""
+
+    def __init__(self):
+        self._fns: dict = {}
+        self.hits = collections.Counter()
+        self.misses = collections.Counter()
+        self.traces = collections.Counter()
+
+    def get(self, key, build):
+        fn = self._fns.get(key)
+        if fn is not None:
+            self.hits[key] += 1
+            return fn
+        self.misses[key] += 1
+        inner = build()
+
+        def counted(*args):
+            # Runs at trace time only: one tick per compile of this key.
+            self.traces[key] += 1
+            return inner(*args)
+
+        fn = jax.jit(counted)
+        self._fns[key] = fn
+        return fn
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    def __contains__(self, key) -> bool:
+        return key in self._fns
+
+    def keys(self):
+        return self._fns.keys()
+
+    def stats(self) -> dict:
+        return {"executables": len(self._fns),
+                "hits": sum(self.hits.values()),
+                "misses": sum(self.misses.values()),
+                "traces": dict(self.traces)}
