@@ -19,8 +19,10 @@ def run(quick: bool = True):
         pts = scene_cloud(0, n)
         base_us = None
         for strat in (core.FRACTAL, core.UNIFORM, core.OCTREE, core.KDTREE):
+            # on_overflow silenced: no host callback inside a timed
+            # executable (uniform at 289K overflows by design).
             fn = jax.jit(lambda p, s=strat: core.partition(
-                p, th=th[n], strategy=s))
+                p, th=th[n], strategy=s, on_overflow="silent"))
             us = time_jit(fn, pts)
             part = fn(pts)
             trav = int(part.traversals)
@@ -31,7 +33,8 @@ def run(quick: bool = True):
                  f"traversals={trav};sorts={sorts};"
                  f"leaves={int(part.num_leaves)};"
                  f"max_block={int(part.max_leaf_vsize)}")
-        frac_fn = jax.jit(lambda p: core.partition(p, th=th[n]))
+        frac_fn = jax.jit(lambda p: core.partition(p, th=th[n],
+                                                   on_overflow="silent"))
         frac_us = time_jit(frac_fn, pts)
         emit(f"partition/speedup_vs_kdtree/n{n}", frac_us,
              f"kdtree_over_fractal={base_us / frac_us:.2f}x")

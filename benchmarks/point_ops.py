@@ -49,7 +49,8 @@ def run(quick: bool = True, impl: str | None = None):
 
         # --- block-parallel (FractalCloud), each op timed on its own ---
         # The value-producing call doubles as the compile warmup.
-        part_fn = jax.jit(lambda p: core.partition(p, th=th))
+        part_fn = jax.jit(lambda p: core.partition(p, th=th,
+                                                   on_overflow="silent"))
         part = jax.block_until_ready(part_fn(pts))
         us_part = time_jit(part_fn, pts, warmup=0)
 

@@ -14,6 +14,9 @@ trajectory is tracked across PRs.
   kernels        -> paper §VI-C RSPU ablation (reuse model + verification)
   serve          -> deployment path: bucketed serving latency/throughput
                     (docs/DESIGN.md §9; both impls unless --impl is given)
+  scene          -> scene-scale streaming inference: points/s + peak-RSS
+                    scaling over 16k-262k-point scenes (docs/DESIGN.md
+                    §10; both impls unless --impl is given)
 
 See benchmarks/README.md for the BENCH_<suite>.json schema.
 """
@@ -23,14 +26,27 @@ import argparse
 import inspect
 import json
 import os
+import subprocess
 import sys
 import time
+
+
+def _git_sha() -> str:
+    """The repo HEAD, so every BENCH_<suite>.json pins the code it
+    measured (perf trajectories are diffed across PRs)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
 
 
 def _write_suite_json(out_dir: str, suite: str, rows, meta: dict) -> str:
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{suite}.json")
-    payload = dict(meta, suite=suite, rows=[
+    payload = dict(meta, suite=suite, git_sha=_git_sha(), rows=[
         {"name": n, "us_per_call": us, "derived": d} for n, us, d in rows])
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
@@ -42,7 +58,7 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: partitioning,point_ops,threshold,"
-                         "accuracy,kernels,serve")
+                         "accuracy,kernels,serve,scene")
     ap.add_argument("--impl", default=None, choices=["xla", "pallas"],
                     help="point-op execute backend for kernel-dispatching "
                          "suites (default: $REPRO_POINT_IMPL or xla)")
@@ -52,7 +68,7 @@ def main(argv=None) -> None:
     quick = not args.full
 
     from benchmarks import (accuracy, common, kernels_bench, partitioning,
-                            point_ops, serve_bench, threshold)
+                            point_ops, scene_bench, serve_bench, threshold)
     suites = {
         "partitioning": partitioning.run,
         "point_ops": point_ops.run,
@@ -60,6 +76,7 @@ def main(argv=None) -> None:
         "accuracy": accuracy.run,
         "kernels": kernels_bench.run,
         "serve": serve_bench.run,
+        "scene": scene_bench.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")

@@ -1,0 +1,126 @@
+"""Scene-scale inference trajectory (docs/DESIGN.md §10): points/s and
+peak-memory scaling for ``repro.scene`` across scene sizes.
+
+This is the workload the paper's "large-scale" claim is about: a single
+100k–1M-point cloud segmented end to end without ever materializing an
+O(n²) point op — the scene is tiled into fixed-shape blocks, tiles stream
+through the bucketed serving engine (one executable per bucket, compiled
+in ``warm()`` and excluded from the timings), and logits stitch back by
+owner tile.  Peak RSS is reported per size so the memory trajectory is
+visibly sublinear in n² (tile tensors are O(tile_points), the output is
+O(n)); wall-clock covers tiling + dispatch + stitch.
+
+Rows (see benchmarks/README.md):
+  scene/<impl>/n<k>/infer       end-to-end µs; derived points_per_s, tiles,
+                                halo_points, peak_rss_mb
+  scene/<impl>/n<k>/compile     warm() compile seconds (excluded above)
+
+CLI (the CI scene-smoke leg):
+  PYTHONPATH=src python -m benchmarks.scene_bench --n 16384 --json bench_out
+"""
+from __future__ import annotations
+
+import argparse
+import multiprocessing
+import resource
+import time
+
+from benchmarks.common import emit
+from repro.kernels import ops as kops
+
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _one_scene(impl, n, tile_points, th, halo, microbatch, mesh):
+    """One (impl, n) measurement; run in its own process (see run())."""
+    import jax
+
+    from repro import scene
+    from repro.data import synthetic
+
+    coords, _ = synthetic.scene(0, n)
+    cfg = scene.SceneConfig(tile_points=tile_points, halo=halo, th=th,
+                            impl=impl, microbatch=microbatch, mesh=mesh)
+    eng = scene.SceneEngine(cfg)
+    t0 = time.monotonic()
+    eng.warm()
+    compile_s = time.monotonic() - t0
+    t0 = time.monotonic()
+    logits, plan = eng.infer(coords)
+    dt = time.monotonic() - t0
+    assert logits.shape == (n, cfg.num_classes)
+    return {"dt": dt, "compile_s": compile_s, "tiles": plan.num_tiles,
+            "halo_points": plan.halo_points, "max_tile": plan.max_tile_n,
+            "peak_rss_mb": _peak_rss_mb(),
+            "backend": jax.default_backend()}
+
+
+def run(quick: bool = True, impl: str | None = None, *,
+        ns: tuple | None = None, tile_points: int = 4096, th: int = 256,
+        halo: float = 0.1, microbatch: int = 4, mesh: str = "none"):
+    impls = ([kops.resolve_impl(impl)] if impl is not None
+             else ["xla", "pallas"])
+    ns = ns or ((16_384,) if quick else (16_384, 65_536, 262_144))
+    # One spawned process per (impl, n): ru_maxrss is a process-lifetime
+    # high-watermark, so in-process runs would inherit the peak of every
+    # prior size and flatten the memory-scaling trajectory this suite
+    # exists to show.
+    ctx = multiprocessing.get_context("spawn")
+    for im in impls:
+        for n in ns:
+            with ctx.Pool(1) as pool:
+                m = pool.apply(_one_scene, (im, n, tile_points, th, halo,
+                                            microbatch, mesh))
+            note = "" if m["backend"] == "tpu" else "interpret_mode"
+            emit(f"scene/{im}/n{n}/compile", m["compile_s"] * 1e6,
+                 "excluded_from_infer")
+            emit(f"scene/{im}/n{n}/infer", m["dt"] * 1e6,
+                 f"points_per_s={n / m['dt']:.4g};tiles={m['tiles']};"
+                 f"halo_points={m['halo_points']};"
+                 f"max_tile={m['max_tile']};"
+                 f"peak_rss_mb={m['peak_rss_mb']:.0f}"
+                 + (f";{note}" if note and im == "pallas" else ""))
+    return ",".join(impls)  # backend(s) that ran, for the JSON meta
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", default="16384",
+                    help="comma-separated scene sizes")
+    ap.add_argument("--tile-points", type=int, default=4096)
+    ap.add_argument("--th", type=int, default=256)
+    ap.add_argument("--halo", type=float, default=0.1)
+    ap.add_argument("--microbatch", type=int, default=4)
+    ap.add_argument("--impl", default=None, choices=["xla", "pallas"],
+                    help="default: both backends")
+    ap.add_argument("--mesh", default="none", choices=["none", "auto"],
+                    help="auto: shard tile microbatches over the elastic "
+                         "host mesh")
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="write BENCH_scene.json into DIR")
+    args = ap.parse_args(argv)
+
+    import sys
+
+    from benchmarks import common
+    from benchmarks.run import _write_suite_json
+
+    ns = tuple(int(x) for x in args.n.split(","))
+    quick = max(ns) < 262_144      # paper-scale runs are not CI smoke
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    ran = run(quick=quick, impl=args.impl, ns=ns,
+              tile_points=args.tile_points, th=args.th, halo=args.halo,
+              microbatch=args.microbatch, mesh=args.mesh)
+    if args.json:
+        path = _write_suite_json(args.json, "scene", common.ROWS,
+                                 {"quick": quick, "impl": ran,
+                                  "elapsed_s": round(time.time() - t0, 3),
+                                  "unix_time": int(t0)})
+        print(f"# wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,7 +30,7 @@ def run(quick: bool = True):
 
     for th in ths:
         def pipeline(p, th=th):
-            part = core.partition(p, th=th)
+            part = core.partition(p, th=th, on_overflow="silent")
             samp = core.blockwise_fps(part, rate=0.25, k_out=k, bs=th)
             nb = core.blockwise_ball_query(part, samp, radius=radius,
                                            num=num, w=2 * th)

@@ -1,15 +1,18 @@
 """FractalCloud core: Fractal partitioning + Block-Parallel Point Ops."""
 from repro.core import bppo, fractal, ref
 from repro.core.fractal import (FRACTAL, KDTREE, OCTREE, STRATEGIES, UNIFORM,
-                                FractalPartition, default_depth, leaf_view,
-                                max_leaves, partition, window_view)
+                                FractalOverflowError, FractalOverflowWarning,
+                                FractalPartition, check_overflow,
+                                default_depth, leaf_view, max_leaves,
+                                partition, window_view)
 from repro.core.bppo import (BWNeighbors, BWSamples, blockwise_ball_query,
                              blockwise_fps, blockwise_interpolate,
                              blockwise_knn, gather)
 
 __all__ = [
     "bppo", "fractal", "ref", "FRACTAL", "KDTREE", "OCTREE", "UNIFORM",
-    "STRATEGIES", "FractalPartition", "default_depth", "max_leaves",
+    "STRATEGIES", "FractalOverflowError", "FractalOverflowWarning",
+    "FractalPartition", "check_overflow", "default_depth", "max_leaves",
     "partition", "leaf_view", "window_view", "BWSamples", "BWNeighbors",
     "blockwise_fps", "blockwise_ball_query", "blockwise_knn",
     "blockwise_interpolate", "gather",

@@ -131,8 +131,8 @@ def _window_to_global(widx: Array, lidx: Array) -> Array:
 
 def _neighbor_slices(part: FractalPartition, samp: BWSamples):
     """Per-leaf slice arrays the neighbor plans chunk over."""
-    return (part.leaf_start, part.leaf_rsize, part.parent_start,
-            part.parent_rsize, part.parent_vsize, part.is_leaf,
+    return (part.leaf_start, part.leaf_vsize, part.parent_start,
+            part.parent_vsize, part.is_leaf,
             samp.gidx, samp.block_mask)
 
 
@@ -151,8 +151,8 @@ def _chunked_slices(sl, slice_fn, chunk):
 
 
 def _bq_slice(part, sl, *, r2, radius, num, w, impl):
-    ls, lr, ps, pr, pv, il, gidx, bmask = sl
-    win, wmask, widx = window_from(ls, lr, ps, pr, pv, il, part.coords,
+    ls, lv, ps, pv, il, gidx, bmask = sl
+    win, wmask, widx = window_from(ls, lv, ps, pv, il, part.coords,
                                    part.valid, w)
     win = lc(win, "blocks", None, None)
     centers = lc(part.coords[gidx], "blocks", None, None)
@@ -187,8 +187,8 @@ def blockwise_ball_query(part: FractalPartition, samp: BWSamples, *,
 
 
 def _knn_slice(part, sl, *, k, w, impl):
-    ls, lr, ps, pr, pv, il, gidx, bmask = sl
-    win, wmask, widx = window_from(ls, lr, ps, pr, pv, il, part.coords,
+    ls, lv, ps, pv, il, gidx, bmask = sl
+    win, wmask, widx = window_from(ls, lv, ps, pv, il, part.coords,
                                    part.valid, w)
     win = lc(win, "blocks", None, None)
     centers = lc(part.coords[gidx], "blocks", None, None)

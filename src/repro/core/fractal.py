@@ -29,10 +29,12 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -41,8 +43,45 @@ UNIFORM = "uniform"
 OCTREE = "octree"
 KDTREE = "kdtree"
 STRATEGIES = (FRACTAL, UNIFORM, OCTREE, KDTREE)
+ON_OVERFLOW = ("warn", "silent")
 
 _BIG = jnp.float32(3.0e38)
+
+
+class FractalOverflowWarning(UserWarning):
+    """A partition hit its depth cap with a leaf still holding >th points."""
+
+
+class FractalOverflowError(RuntimeError):
+    """Raised by ``check_overflow`` on a partition that kept >th leaves."""
+
+
+def _overflow_warn(overflowed, max_vsize, *, n, th, depth):
+    # Host callback: under vmap the flags arrive batched, so reduce.
+    if np.any(np.asarray(overflowed)):
+        warnings.warn(
+            f"fractal partition overflow: a leaf kept "
+            f"{int(np.max(np.asarray(max_vsize)))} > th={th} valid points at "
+            f"the depth cap (n={n}, depth={depth}); downstream block ops "
+            f"will truncate that leaf — raise depth/th or pre-tile the "
+            f"cloud (repro.scene)", FractalOverflowWarning, stacklevel=2)
+
+
+def check_overflow(part: "FractalPartition", th: int | None = None) -> None:
+    """Eagerly raise ``FractalOverflowError`` if ``part`` overflowed.
+
+    The jit-compatible path is ``partition(..., on_overflow="warn")`` (a
+    host callback); this is the strict host-side twin for callers that
+    would rather fail than serve a truncated partition.
+    """
+    if bool(jnp.any(part.overflowed)):
+        mx = int(jnp.max(part.max_leaf_vsize))
+        n = part.perm.shape[-1]  # last axis: point count even when batched
+        raise FractalOverflowError(
+            f"fractal partition overflow: a leaf kept {mx} valid points"
+            + (f" > th={th}" if th is not None else "")
+            + f" at the depth cap (n={n}); raise depth/th or pre-tile "
+            f"the cloud (repro.scene)")
 
 
 def default_depth(n: int, th: int, slack: int = 9, hard_cap: int = 18) -> int:
@@ -136,10 +175,30 @@ def partition(
     depth: int | None = None,
     strategy: str = FRACTAL,
     max_leaves_: int | None = None,
+    dim0: int | Array = 0,
+    on_overflow: str = "warn",
 ) -> FractalPartition:
-    """Partition a point cloud into <=th-point blocks in DFT memory order."""
+    """Partition a point cloud into <=th-point blocks in DFT memory order.
+
+    ``dim0`` offsets the split-dimension cycle: level ``l`` splits on
+    dimension ``(l + dim0) % 3``.  A traced int32 scalar is accepted, so a
+    vmapped plan can phase each cloud independently — the scene tiler uses
+    this to make a tile's local tree reproduce the global subtree rooted at
+    the tile node (a node at depth ``d`` splits on ``d % 3``; see
+    docs/DESIGN.md §10).
+
+    ``on_overflow="warn"`` emits a ``FractalOverflowWarning`` (via a host
+    callback, jit/vmap-safe) when the depth cap leaves a leaf with more
+    than ``th`` valid points, naming the offending (n, th, depth);
+    ``"silent"`` restores the old behaviour (timed benchmark loops opt in
+    so the callback never sits inside a measured executable).  Strict
+    callers raise instead with ``check_overflow``.
+    """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}")
+    if on_overflow not in ON_OVERFLOW:
+        raise ValueError(f"on_overflow must be one of {ON_OVERFLOW}, "
+                         f"got {on_overflow!r}")
     n = coords.shape[0]
     if valid is None:
         valid = jnp.ones((n,), bool)
@@ -194,7 +253,9 @@ def partition(
         if lvl == depth:
             break
 
-        dim = lvl % 3
+        # Static python int when dim0 is 0/int (the common case, compiles
+        # to a strided slice); a traced scalar otherwise (gather on axis 1).
+        dim = (lvl + dim0) % 3
         x = pts[:, dim]
         if strategy == FRACTAL:
             lo, hi = _segment_minmax(x, vld, node, nn)
@@ -337,6 +398,10 @@ def partition(
         leaf_capacity_exceeded=num_leaves > ml,
         max_leaf_vsize=jnp.max(jnp.where(slot_is_leaf, slot_vsize, 0)),
     )
+    if on_overflow == "warn" and adaptive and n > th:
+        jax.debug.callback(
+            functools.partial(_overflow_warn, n=n, th=th, depth=depth),
+            part.overflowed, part.max_leaf_vsize)
     return part
 
 
@@ -364,19 +429,17 @@ def leaf_view(part: FractalPartition, data: Array, bs: int):
                      bs)
 
 
-def window_from(leaf_start, leaf_rsize, parent_start, parent_rsize,
-                parent_vsize, is_leaf, data, valid, w: int):
+def window_from(leaf_start, leaf_vsize, parent_start, parent_vsize,
+                is_leaf, data, valid, w: int):
     """Slice-level search-space window (see window_view)."""
     n = data.shape[0]
-    want = (leaf_start - jnp.maximum(0, (w - leaf_rsize) // 2))
+    want = (leaf_start - jnp.maximum(0, (w - leaf_vsize) // 2))
     lo = jnp.clip(want, parent_start,
-                  jnp.maximum(parent_start, parent_start + parent_rsize - w))
+                  jnp.maximum(parent_start, parent_start + parent_vsize - w))
     j = jnp.arange(w, dtype=jnp.int32)
     idx = lo[:, None] + j[None, :]
     valid_end = parent_start + parent_vsize
-    mask = (is_leaf[:, None]
-            & (idx < valid_end[:, None])
-            & (idx < parent_start[:, None] + parent_rsize[:, None]))
+    mask = is_leaf[:, None] & (idx < valid_end[:, None])
     mask = mask & valid[jnp.clip(idx, 0, n - 1)]
     idx = jnp.clip(idx, 0, n - 1)
     return data[idx], mask, idx
@@ -385,14 +448,17 @@ def window_from(leaf_start, leaf_rsize, parent_start, parent_rsize,
 def window_view(part: FractalPartition, data: Array, w: int):
     """Per-leaf *search-space* window into the parent range, padded to w.
 
-    The window is centered on the leaf and clamped inside the parent range,
-    so the leaf itself is always covered when w >= leaf_rsize (bounded
-    truncation of pathological parents — the on-chip block budget of the
-    paper).  Invalid points only ever live at the end of a range; windows may
-    still cover them, so a mask is returned.
+    The window is centered on the leaf and clamped inside the parent's
+    *valid prefix*, so the leaf's valid points are always covered when
+    w >= leaf_vsize (bounded truncation of pathological parents — the
+    on-chip block budget of the paper).  Placement depends only on valid
+    counts: invalid points sink to the end of every range (§3), so a
+    bucket-padded cloud places its windows exactly where the unpadded
+    cloud does — the §9 padding-invisibility contract.  Windows may still
+    cover stray invalid slots, so a mask is returned.
     """
-    return window_from(part.leaf_start, part.leaf_rsize, part.parent_start,
-                       part.parent_rsize, part.parent_vsize, part.is_leaf,
+    return window_from(part.leaf_start, part.leaf_vsize, part.parent_start,
+                       part.parent_vsize, part.is_leaf,
                        data, part.valid, w)
 
 

@@ -142,8 +142,13 @@ def _stage_points(cfg: PNNConfig, stage: SAStage, coords, feats, valid,
         return centers, gfeats, gmask, svalid, ctx
 
     if part is None:
+        # Silent: this partition sits inside every jitted forward
+        # (training steps and the deeper SA stages of serving) — no host
+        # callback there.  Overflow is surfaced at the plan boundaries:
+        # partition's own default ("warn"), the serve plan executable
+        # (ServeConfig.on_overflow), the scene tiler, and check_overflow.
         part = core.partition(coords, valid, th=cfg.th,
-                              strategy=cfg.strategy)
+                              strategy=cfg.strategy, on_overflow="silent")
     samp = core.blockwise_fps(part, rate=stage.rate, k_out=n_out, bs=cfg.th,
                               impl=cfg.impl)
     nb = core.blockwise_ball_query(part, samp, radius=stage.radius,
@@ -305,3 +310,21 @@ def pointvector_seg(n=2048, point_ops="global", th=256, impl=None):
     return PNNConfig(name="pointvector_seg", variant="pointvector",
                      task="seg", n_points=n, point_ops=point_ops, th=th,
                      impl=impl)
+
+
+def scene_seg(n=4096, th=256, impl=None, widths=(32, 32, 64),
+              fp=(64, 64), rate=0.25, radius=0.25, nsample=16):
+    """Single-SA-stage segmentation config for scene tiling (DESIGN.md §10).
+
+    With exactly one abstraction stage, every point op runs inside the
+    stage-0 partition — the one ``apply(part0=...)`` accepts from outside
+    — so tile-wise execution over exact fractal subtrees (``repro.scene``
+    with ``halo=0`` and per-tile ``dim0``) reproduces the whole-scene
+    forward to float precision (tests/test_scene.py).  Multi-stage
+    configs re-partition their sampled cloud per tile and are therefore
+    approximate at tile borders; the halo ring is the quality knob there.
+    """
+    return PNNConfig(name="scene_seg", variant="pointnet2", task="seg",
+                     n_points=n, point_ops="bppo", th=th, impl=impl,
+                     stages=(SAStage(rate, radius, nsample, widths),),
+                     fp_widths=(fp,))

@@ -1,0 +1,18 @@
+"""repro.scene — streaming large-scale scene inference (DESIGN.md §10).
+
+Tile -> halo -> stitch: a 100k–1M-point scene is cut into DFT-contiguous
+fractal tiles (``tiler``), each tile (plus a halo ring of border context)
+streams through the bucketed, plan-cached serving engine (``executor`` on
+top of ``repro.serve``), and per-point segmentation logits scatter back to
+scene order under the owner-tile rule (``stitch``) — no O(n²) op is ever
+materialized.  ``examples/segment_scene.py`` is the demo;
+``benchmarks/scene_bench.py`` tracks points/s and peak-memory scaling.
+"""
+from repro.scene.executor import SceneConfig, SceneEngine
+from repro.scene.stitch import owner_of, stitch, stitch_tile
+from repro.scene.tiler import ScenePlan, Tile, tile_scene
+
+__all__ = [
+    "SceneConfig", "SceneEngine", "ScenePlan", "Tile", "owner_of",
+    "stitch", "stitch_tile", "tile_scene",
+]

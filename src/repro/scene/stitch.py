@@ -1,0 +1,54 @@
+"""Stitching: scatter per-tile outputs back to scene point order (§10).
+
+The owner-tile rule: every scene point is *owned* by exactly one tile
+(tiles are the leaves of one coarse partition, which tile [0, n)); any
+other tile that sees the point saw it as *halo context* and its output
+row for that point is discarded.  Because the executor submits each tile
+cloud owned-first (``Tile.indices``), stitching is a single scatter of
+each output's owned prefix — no overlap resolution pass, no atomics, and
+the result is deterministic regardless of tile completion order.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.scene.tiler import ScenePlan
+
+
+def stitch_tile(out: np.ndarray, tile, rows) -> int:
+    """Scatter one tile's owned-prefix rows into ``out``; returns the
+    number of points written.  The single place the owner-tile rule is
+    applied — the streaming executor calls it per drained tile so only
+    the scene-sized output stays live."""
+    rows = np.asarray(rows)
+    if rows.shape[0] != tile.n:
+        raise ValueError(
+            f"tile {tile.tid}: expected {tile.n} rows "
+            f"({tile.n_owned} owned + {len(tile.halo)} halo), "
+            f"got {rows.shape[0]}")
+    out[tile.owned] = rows[:tile.n_owned]
+    return tile.n_owned
+
+
+def stitch(plan: ScenePlan, outputs: dict, width: int,
+           dtype=np.float32) -> np.ndarray:
+    """Assemble per-tile per-point rows into one (n, width) scene array.
+
+    ``outputs[tid]`` is the (tile.n, width) result for tile ``tid``, rows
+    in ``Tile.indices`` order (owned first, halo appended).  Halo rows are
+    dropped; owned rows scatter to their original scene positions.
+    """
+    out = np.zeros((plan.n, width), dtype)
+    seen = sum(stitch_tile(out, tile, outputs[tile.tid])
+               for tile in plan.tiles)
+    if seen != plan.n:
+        raise ValueError(f"tiles own {seen} points, scene has {plan.n}")
+    return out
+
+
+def owner_of(plan: ScenePlan) -> np.ndarray:
+    """(n,) tile id owning each scene point (diagnostics / tests)."""
+    owner = np.full((plan.n,), -1, np.int32)
+    for tile in plan.tiles:
+        owner[tile.owned] = tile.tid
+    return owner

@@ -1,0 +1,170 @@
+"""Scene tiler: coarse fractal pre-partition + halo rings (DESIGN.md §10).
+
+A room-scale cloud (100k–1M points) is cut into tiles by the *same*
+level-synchronous engine that builds the per-model block structure
+(``core/fractal.py``), run once at a coarse threshold ``tile_points``.
+Two properties of that tree do all the work:
+
+* **tiles are DFT-contiguous** — every coarse leaf is one contiguous slice
+  of the sorted arrays, so a tile is a zero-copy range, and its spatial
+  neighbors sit in nearby slices (§3).  Halo candidates therefore come
+  from a bounded DFT window around the tile's range instead of an O(n)
+  all-tiles scan — the reason halos are cheap at 1M points.
+* **tiles are exact subtrees** — the fractal split of a node depends only
+  on the points inside it, never on ``th``, so the coarse tree is a
+  prefix of any finer tree over the same cloud.  Re-partitioning a tile's
+  points with the model's own ``th`` and the tile's split-dimension phase
+  (``dim0 = depth % 3``) reproduces the global subtree exactly, which is
+  what makes tile-wise inference consistent with a whole-scene forward
+  (the §10 exactness contract, tested in tests/test_scene.py).
+
+The tiler is host-side glue: the partition itself is one jitted call; the
+per-tile index bookkeeping is numpy over O(tile + window) slices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+
+from repro.core import fractal
+
+
+@dataclasses.dataclass(frozen=True)
+class Tile:
+    """One dispatchable unit of a scene: owned points + halo context."""
+
+    tid: int               # compact tile id (coarse-DFT order)
+    owned: np.ndarray      # (n_owned,) original indices, coarse-DFT order
+    halo: np.ndarray       # (n_halo,) original indices (context only:
+                           # present for neighbor search, never stitched)
+    depth: int             # coarse-tree depth of the tile node
+    lo: np.ndarray         # (3,) bbox min of the owned points
+    hi: np.ndarray         # (3,) bbox max
+
+    @property
+    def dim0(self) -> int:
+        """Split-phase for re-partitioning: a node at depth d splits on
+        dimension d % 3, so the tile's local level 0 must too."""
+        return self.depth % 3
+
+    @property
+    def n_owned(self) -> int:
+        return len(self.owned)
+
+    @property
+    def n(self) -> int:
+        return len(self.owned) + len(self.halo)
+
+    @property
+    def indices(self) -> np.ndarray:
+        """Tile-cloud gather indices: owned first (coarse-DFT order), halo
+        appended — the stitcher relies on this layout."""
+        return np.concatenate([self.owned, self.halo])
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenePlan:
+    """The full tiling of one scene (every point owned by exactly one tile)."""
+
+    n: int
+    tile_points: int
+    halo: float
+    strategy: str
+    tiles: tuple            # tuple[Tile, ...], coarse-DFT order
+    overflowed: bool        # coarse tree hit its depth cap (oversize tiles)
+
+    @property
+    def num_tiles(self) -> int:
+        return len(self.tiles)
+
+    @property
+    def halo_points(self) -> int:
+        return sum(len(t.halo) for t in self.tiles)
+
+    @property
+    def max_tile_n(self) -> int:
+        return max((t.n for t in self.tiles), default=0)
+
+
+@functools.lru_cache(maxsize=None)
+def _partition_fn(tile_points: int, strategy: str, depth: int | None):
+    return jax.jit(lambda c: fractal.partition(
+        c, th=tile_points, strategy=strategy, depth=depth))
+
+
+def _bbox_dist(pts: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Euclidean distance of each point to an axis-aligned box (0 inside)."""
+    d = np.maximum(np.maximum(lo - pts, pts - hi), 0.0)
+    return np.sqrt((d * d).sum(-1))
+
+
+def tile_scene(coords, *, tile_points: int, halo: float = 0.0,
+               halo_window: int | None = None,
+               max_halo_points: int | None = None,
+               strategy: str = fractal.FRACTAL,
+               depth: int | None = None) -> ScenePlan:
+    """Cut one (n, 3) cloud into <= ``tile_points``-point tiles + halos.
+
+    ``halo`` is a radius: points of *other* tiles within ``halo`` of a
+    tile's bounding box join that tile's cloud as context (so border
+    neighborhoods are as populated as an untiled run), but their outputs
+    are discarded at stitch time — the owner-tile rule.  Candidates are
+    drawn from a ``halo_window``-point DFT window on each side of the
+    tile's range (default ``2 * tile_points``; DFT adjacency ≈ spatial
+    adjacency, §3) and capped at the ``max_halo_points`` nearest (default
+    ``tile_points // 4``).  ``halo=0`` disables halos, which is also the
+    exactness mode (§10).
+    """
+    if tile_points <= 0:
+        raise ValueError(f"tile_points must be positive, got {tile_points}")
+    if halo < 0:
+        raise ValueError(f"halo must be >= 0, got {halo}")
+    coords = np.asarray(coords, np.float32)
+    n = coords.shape[0]
+    part = _partition_fn(tile_points, strategy, depth)(coords)
+
+    # One host pull each; everything after is numpy slices.
+    perm = np.asarray(part.perm)
+    sorted_pts = np.asarray(part.coords)
+    valid = np.asarray(part.valid)
+    is_leaf = np.asarray(part.is_leaf)
+    starts = np.asarray(part.leaf_start)
+    rsizes = np.asarray(part.leaf_rsize)
+    vsizes = np.asarray(part.leaf_vsize)
+    depths = np.asarray(part.leaf_depth)
+    overflowed = bool(part.overflowed)
+
+    W = (2 * tile_points) if halo_window is None else int(halo_window)
+    cap = (tile_points // 4) if max_halo_points is None else int(
+        max_halo_points)
+
+    tiles = []
+    for i in np.nonzero(is_leaf)[0]:
+        s, r, v, d = int(starts[i]), int(rsizes[i]), int(vsizes[i]), \
+            int(depths[i])
+        if v == 0:
+            continue  # invalid-only / empty leaf: nothing to own
+        owned_pos = np.arange(s, s + v)
+        tpts = sorted_pts[owned_pos]
+        lo, hi = tpts.min(0), tpts.max(0)
+        halo_ids = np.empty((0,), perm.dtype)
+        if halo > 0 and cap > 0:
+            cand = np.concatenate([np.arange(max(0, s - W), s),
+                                   np.arange(s + r, min(n, s + r + W))])
+            cand = cand[valid[cand]]
+            if len(cand):
+                dist = _bbox_dist(sorted_pts[cand], lo, hi)
+                near = dist <= halo
+                cand, dist = cand[near], dist[near]
+                if len(cand) > cap:
+                    cand = cand[np.argsort(dist, kind="stable")[:cap]]
+                    cand.sort()  # keep halo in DFT order (determinism)
+                halo_ids = perm[cand]
+        tiles.append(Tile(tid=len(tiles), owned=perm[owned_pos],
+                          halo=halo_ids, depth=d, lo=lo, hi=hi))
+    return ScenePlan(n=n, tile_points=tile_points, halo=halo,
+                     strategy=strategy, tiles=tuple(tiles),
+                     overflowed=overflowed)

@@ -27,6 +27,8 @@ class Request:
     n: int             # real (pre-padding) point count
     bucket: int
     t_submit: float
+    dim0: int = 0      # split-dimension phase for the partition plan
+                       # (scene tiles pass their tree depth % 3, §10)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,13 +54,13 @@ class MicroBatchQueue:
             b: [] for b in policy.buckets}
         self._next_rid = 0
 
-    def submit(self, coords, now: float, valid=None) -> Request:
+    def submit(self, coords, now: float, valid=None, dim0: int = 0) -> Request:
         """Admit one cloud: bucket-pad it and enqueue.  Returns the
         Request (its ``rid`` is the completion handle)."""
         n = coords.shape[-2]
         bucket, coords, valid = self.policy.pad(coords, valid)
         req = Request(rid=self._next_rid, coords=coords, valid=valid, n=n,
-                      bucket=bucket, t_submit=now)
+                      bucket=bucket, t_submit=now, dim0=int(dim0))
         self._next_rid += 1
         self._pending[bucket].append(req)
         return req

@@ -54,6 +54,11 @@ class ServeConfig:
     leaf_chunk: int | None = None
     mesh: str = "none"             # none | auto (elastic host mesh)
     model_axis: int = 2            # elastic mesh model-axis request
+    stages: tuple | None = None    # override PNNConfig.stages (scene uses
+    fp_widths: tuple | None = None  # a single-SA-stage model, §10)
+    on_overflow: str = "warn"      # partition-plan depth-cap overflow:
+                                   # warn (async callback, ~free next to a
+                                   # forward) | silent
 
 
 class ServeEngine:
@@ -76,12 +81,14 @@ class ServeEngine:
             self.mesh = elastic.make_mesh(model_axis=cfg.model_axis)
         else:
             self.mesh = None
+        overrides = {k: getattr(cfg, k) for k in ("stages", "fp_widths")
+                     if getattr(cfg, k) is not None}
         self._base = pnn.PNNConfig(
             name=f"serve_{cfg.variant}_{cfg.task}", variant=cfg.variant,
             task=cfg.task, num_classes=cfg.num_classes,
             n_points=self.policy.buckets[0], point_ops=cfg.point_ops,
             th=cfg.th, strategy=cfg.strategy, impl=self.impl,
-            leaf_chunk=cfg.leaf_chunk)
+            leaf_chunk=cfg.leaf_chunk, **overrides)
         self.params = (params if params is not None
                        else pnn.init(jax.random.PRNGKey(seed), self._base))
         self.results: dict[int, np.ndarray] = {}
@@ -98,11 +105,20 @@ class ServeEngine:
     def _plan_fn(self, bucket: int):
         key = ("plan", bucket, self.cfg.th, self.cfg.strategy)
         th, strategy = self.cfg.th, self.cfg.strategy
+        on_overflow = self.cfg.on_overflow
 
         def build():
-            def plan(clouds, valid):
-                return jax.vmap(lambda c, v: core.partition(
-                    c, v, th=th, strategy=strategy))(clouds, valid)
+            # dim0 is a traced (B,) input, not part of the key: phasing
+            # the split-dimension cycle per cloud (scene tiles) reuses the
+            # one cached plan executable.  on_overflow="warn" (default)
+            # surfaces depth-cap overflow in admitted clouds — e.g. an
+            # unsplittable duplicate cluster bigger than th inside a
+            # scene tile — via an async callback whose cost is noise next
+            # to the forward it gates.
+            def plan(clouds, valid, dim0):
+                return jax.vmap(lambda c, v, d: core.partition(
+                    c, v, th=th, strategy=strategy, dim0=d,
+                    on_overflow=on_overflow))(clouds, valid, dim0)
             return plan
 
         return self.plans.get(key, build)
@@ -161,24 +177,35 @@ class ServeEngine:
         for b in (buckets if buckets is not None else self.policy.buckets):
             t0 = time.monotonic()
             clouds = jnp.zeros((self.queue.microbatch, b, 3), jnp.float32)
-            valid = jnp.ones((self.queue.microbatch, b), bool)
-            jax.block_until_ready(self._forward(b, clouds, valid))
+            # All-invalid clouds — the same filler _execute pads partial
+            # batches with.  (All-*valid* zeros would be b duplicate
+            # points: unsplittable, so every warm() would emit a spurious
+            # partition-overflow warning.)
+            valid = jnp.zeros((self.queue.microbatch, b), bool)
+            dim0 = jnp.zeros((self.queue.microbatch,), jnp.int32)
+            jax.block_until_ready(self._forward(b, clouds, valid, dim0))
             self.compile_s[b] = time.monotonic() - t0
         return dict(self.compile_s)
 
-    def _forward(self, bucket, clouds, valid):
+    def _forward(self, bucket, clouds, valid, dim0):
         clouds, valid = self._device_put_batch(clouds, valid)
         if self.cfg.point_ops == "bppo":
-            part = self._run(self._plan_fn(bucket), clouds, valid)
+            part = self._run(self._plan_fn(bucket), clouds, valid, dim0)
             return self._run(self._serve_fn(bucket), self.params, clouds,
                              valid, part)
         return self._run(self._serve_fn(bucket), self.params, clouds, valid)
 
-    def submit(self, coords, now: float | None = None) -> int:
-        """Admit one (n, 3) cloud; returns the request id."""
+    def submit(self, coords, now: float | None = None, dim0: int = 0) -> int:
+        """Admit one (n, 3) cloud; returns the request id.
+
+        ``dim0`` phases the cloud's fractal-partition plan (split dimension
+        of level l is (l + dim0) % 3) — the scene executor passes each
+        tile's coarse-tree depth so the tile's local tree extends the
+        global one (docs/DESIGN.md §10).  It is a traced plan input, so it
+        never grows the executable cache."""
         now = self._clock() if now is None else now
         coords = jnp.asarray(coords, jnp.float32)
-        req = self.queue.submit(coords, now)
+        req = self.queue.submit(coords, now, dim0=dim0)
         if self._t_first is None:
             self._t_first = now
         return req.rid
@@ -213,7 +240,8 @@ class ServeEngine:
             + [jnp.zeros((bucket, 3), jnp.float32)] * npad)
         valid = jnp.stack([r.valid for r in reqs]
                           + [jnp.zeros((bucket,), bool)] * npad)
-        out = self._forward(bucket, clouds, valid)
+        dim0 = jnp.asarray([r.dim0 for r in reqs] + [0] * npad, jnp.int32)
+        out = self._forward(bucket, clouds, valid, dim0)
         jax.block_until_ready(out)
         t_done = self._clock()
         out = np.asarray(out)

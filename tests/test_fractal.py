@@ -160,6 +160,74 @@ def test_duplicate_points_do_not_hang():
     check_invariants(pts, part, 32, fr.FRACTAL)
 
 
+def test_overflow_surfaced_at_hard_cap_100k():
+    """Depth-cap overflow is surfaced, not silent: 100k duplicate points
+    cannot be split, so the hard cap leaves one >th leaf — partition warns
+    with the offending (n, th) and check_overflow raises."""
+    import warnings
+    pts = jnp.ones((100_000, 3), jnp.float32)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        part = jax.jit(lambda p: core.partition(p, th=64))(pts)
+        jax.block_until_ready(part.overflowed)
+        jax.effects_barrier()
+    msgs = [str(w.message) for w in caught
+            if issubclass(w.category, fr.FractalOverflowWarning)]
+    assert msgs and "n=100000" in msgs[0] and "th=64" in msgs[0], msgs
+    assert bool(part.overflowed) and int(part.max_leaf_vsize) == 100_000
+    with pytest.raises(fr.FractalOverflowError, match="100000.*th=64"):
+        core.check_overflow(part, th=64)
+    # non-overflowing partitions pass the strict check silently
+    ok = jax.jit(lambda p: core.partition(p, th=64))(make_cloud(0, 1024))
+    core.check_overflow(ok, th=64)
+    # opt-out for timed loops: no callback, no warning
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        part = jax.jit(
+            lambda p: core.partition(p, th=64, on_overflow="silent"))(pts)
+        jax.block_until_ready(part.overflowed)
+        jax.effects_barrier()
+    assert not [w for w in caught
+                if issubclass(w.category, fr.FractalOverflowWarning)]
+    with pytest.raises(ValueError, match="on_overflow"):
+        core.partition(pts, th=64, on_overflow="explode")
+
+
+def test_dim0_phases_the_split_cycle():
+    """dim0 offsets the split-dimension cycle (level l splits on
+    (l + dim0) % 3) and accepts a traced scalar, so a vmapped plan can
+    phase per cloud — the scene tiler's subtree-exactness hook (§10)."""
+    pts = make_cloud(9, 512, "uniform")
+    base = jax.jit(lambda p: core.partition(p, th=256, depth=1))(pts)
+    ph1 = jax.jit(lambda p: core.partition(p, th=256, depth=1, dim0=1))(pts)
+    x, y = np.asarray(pts)[:, 0], np.asarray(pts)[:, 1]
+    for part, vals in ((base, x), (ph1, y)):     # dim0=1 -> level 0 on y
+        mid = (vals.max() + vals.min()) / 2
+        perm = np.asarray(part.perm)
+        real = np.where(np.asarray(part.is_leaf))[0]
+        ls = np.asarray(part.leaf_start)[real]
+        lr = np.asarray(part.leaf_rsize)[real]
+        left = perm[ls[0]:ls[0] + lr[0]]
+        right = perm[ls[1]:ls[1] + lr[1]]
+        assert (vals[left] <= mid).all() and (vals[right] > mid).all()
+    # traced dim0 == static dim0, including under vmap
+    traced = jax.jit(lambda p, d: core.partition(p, th=64, dim0=d))
+    for d in range(3):
+        st = core.partition(pts, th=64, dim0=d)
+        tr = traced(pts, jnp.int32(d))
+        np.testing.assert_array_equal(np.asarray(st.perm),
+                                      np.asarray(tr.perm))
+        check_invariants(pts, tr, 64, fr.FRACTAL)
+    both = jax.vmap(lambda p, d: core.partition(p, th=64, dim0=d))(
+        jnp.stack([pts, pts]), jnp.array([0, 2], jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(both.perm[0]),
+        np.asarray(core.partition(pts, th=64, dim0=0).perm))
+    np.testing.assert_array_equal(
+        np.asarray(both.perm[1]),
+        np.asarray(core.partition(pts, th=64, dim0=2).perm))
+
+
 def test_batched_vmap():
     rng = np.random.default_rng(11)
     pts = jnp.asarray(rng.normal(0, 1, (4, 512, 3)).astype(np.float32))

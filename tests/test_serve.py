@@ -62,6 +62,49 @@ def test_pad_points_contract():
         kops.pad_points(coords, 4)
 
 
+def test_scene_bucket_admission_minimal_fitting():
+    """Scene-scale ladder admission: pad() lands each cloud in its minimal
+    bucket with exactly the real points valid (satellite for §10: tile
+    clouds of 3–16k points flow through these buckets)."""
+    policy = serve.BucketPolicy((4096, 16384, 65536))
+    for n, want in [(3000, 4096), (4096, 4096), (4097, 16384),
+                    (12000, 16384), (16384, 16384), (16385, 65536)]:
+        b, c, v = policy.pad(jnp.zeros((n, 3), jnp.float32))
+        assert b == want and c.shape == (want, 3) and v.shape == (want,)
+        assert int(v.sum()) == n and bool(v[:n].all())
+
+
+@pytest.mark.parametrize("bucket,n", [(4096, 3000), (16384, 12000)])
+def test_padded_matches_unpadded_oracle_scene_buckets(bucket, n):
+    """§9 padding invisibility at the scene-scale buckets (previously only
+    exercised at 256): the forward over a cloud padded to 4096/16384
+    equals the unpadded forward on the real points.
+
+    Window placement keys on valid counts (window_view), so the large
+    invalid tail cannot move search windows; the single-SA-stage model
+    bounds CPU cost; the seed satisfies the no-sample-truncation budget
+    of §9 (asserted below so data drift fails loudly)."""
+    cfg = pnn.scene_seg(n=n, th=256, impl="xla", widths=(16, 16),
+                        fp=(16, 16))
+    params = pnn.init(jax.random.PRNGKey(0), cfg)
+    pts = jnp.asarray(synthetic.scene(0, n)[0])
+
+    from repro import core
+    part = jax.jit(lambda p: core.partition(p, th=256))(pts)
+    k_out = int(round(cfg.stages[0].rate * n))
+    samp = core.blockwise_fps(part, rate=cfg.stages[0].rate, k_out=k_out,
+                              bs=256, impl="xla")
+    assert int(samp.total) <= k_out, "seed no longer satisfies §9 budget"
+
+    oracle = np.asarray(jax.jit(
+        lambda c: pnn.apply(params, cfg, c))(pts))
+    padded, valid = kops.pad_points(pts, bucket)
+    cfg_b = dataclasses.replace(cfg, n_points=bucket)
+    out = np.asarray(jax.jit(
+        lambda c, v: pnn.apply(params, cfg_b, c, valid=v))(padded, valid))
+    np.testing.assert_allclose(out[:n], oracle, rtol=1e-5, atol=1e-5)
+
+
 def test_padded_matches_unpadded_oracle():
     """Bucket padding is invisible: the padded forward equals the unpadded
     oracle on the real points (seg covers FPS + grouping + interpolation).
