@@ -14,6 +14,9 @@ trajectory is tracked across PRs.
   kernels        -> paper §VI-C RSPU ablation (reuse model + verification)
   serve          -> deployment path: bucketed serving latency/throughput
                     (docs/DESIGN.md §9; both impls unless --impl is given)
+  train          -> fine-tune step time, fwd vs fwd+bwd through the
+                    execute-phase VJPs (docs/DESIGN.md §4; both impls
+                    unless --impl is given)
   scene          -> scene-scale streaming inference: points/s + peak-RSS
                     scaling over 16k-262k-point scenes (docs/DESIGN.md
                     §10; both impls unless --impl is given)
@@ -58,7 +61,7 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: partitioning,point_ops,threshold,"
-                         "accuracy,kernels,serve,scene")
+                         "accuracy,kernels,serve,scene,train")
     ap.add_argument("--impl", default=None, choices=["xla", "pallas"],
                     help="point-op execute backend for kernel-dispatching "
                          "suites (default: $REPRO_POINT_IMPL or xla)")
@@ -68,7 +71,8 @@ def main(argv=None) -> None:
     quick = not args.full
 
     from benchmarks import (accuracy, common, kernels_bench, partitioning,
-                            point_ops, scene_bench, serve_bench, threshold)
+                            point_ops, scene_bench, serve_bench, threshold,
+                            train_bench)
     suites = {
         "partitioning": partitioning.run,
         "point_ops": point_ops.run,
@@ -77,6 +81,7 @@ def main(argv=None) -> None:
         "kernels": kernels_bench.run,
         "serve": serve_bench.run,
         "scene": scene_bench.run,
+        "train": train_bench.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")

@@ -71,15 +71,23 @@ def run(quick: bool = True, impl: str | None = None, *,
                 emit(f"serve/{im}/bucket{b}/{pct}", row[f"{pct}_ms"] * 1e3,
                      f"count={row['count']}"
                      + (f";{note}" if note and im == "pallas" else ""))
-            emit(f"serve/{im}/bucket{b}/throughput", 0.0,
-                 f"clouds_per_s={row['clouds_per_s']:.4g}")
+            if row["clouds_per_s"] is not None:
+                emit(f"serve/{im}/bucket{b}/throughput", 0.0,
+                     f"clouds_per_s={row['clouds_per_s']:.4g}")
         pc = st["plan_cache"]
         one_trace = all(v == 1 for v in pc["traces"].values())
-        emit(f"serve/{im}/stream", 0.0,
-             f"clouds_per_s={st['clouds_per_s']:.4g};"
-             f"mpts_per_s={st['mpts_per_s']:.4g};"
-             f"executables={pc['executables']};"
-             f"one_trace_per_key={one_trace}")
+        if st["clouds_per_s"] is None:
+            # No microbatch completed: stats() reports None rather than a
+            # clamp-divided absurdity — nothing to emit for throughput.
+            emit(f"serve/{im}/stream", 0.0,
+                 f"clouds_per_s=none;executables={pc['executables']};"
+                 f"one_trace_per_key={one_trace}")
+        else:
+            emit(f"serve/{im}/stream", 0.0,
+                 f"clouds_per_s={st['clouds_per_s']:.4g};"
+                 f"mpts_per_s={st['mpts_per_s']:.4g};"
+                 f"executables={pc['executables']};"
+                 f"one_trace_per_key={one_trace}")
     return ",".join(impls)  # backend(s) that ran, for the JSON meta
 
 

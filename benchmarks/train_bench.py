@@ -1,0 +1,118 @@
+"""Training perf trajectory: PNN step time, forward vs forward+backward,
+for both point-op execute backends.
+
+The comparison the VJP layer (kernels/vjp.py, docs/DESIGN.md §4) makes
+meaningful: with ``impl="pallas"`` the backward pass runs through the
+kernels too (gather's transposed one-hot scatter-add; index producers
+contribute zero cotangents), so fwd+bwd/fwd ratios are comparable across
+impls instead of the pallas column silently falling back to the oracle.
+Off-TPU the pallas rows run in interpret mode — correctness trajectory,
+wall-clock not meaningful (flagged in ``derived``).
+
+Rows (benchmarks/README.md has the BENCH_<suite>.json schema):
+  train/<impl>/fwd            jitted forward (loss only)
+  train/<impl>/fwd_bwd        jitted value_and_grad
+  train/<impl>/step           full AdamW step (grad + update)
+  train/<impl>/loss_drop      loss over ``steps`` fixed-batch steps
+
+CLI (the CI train-smoke leg):
+  PYTHONPATH=src python -m benchmarks.train_bench --steps 3 --json bench_out
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jit
+from repro.kernels import ops as kops
+
+
+def _bench_impl(im, *, n, th, batch, steps, note):
+    from repro.data import synthetic
+    from repro.models import pnn
+    from repro.train import optimizer as opt_lib
+    from repro.train.pnn import loss_fn, make_train_step
+
+    mcfg = pnn.pointnet2_cls(n=n, point_ops="bppo", th=th, impl=im)
+    params = pnn.init(jax.random.PRNGKey(0), mcfg)
+    pts, labels = synthetic.classification_batch(0, 0, batch, n)
+    data = {"points": pts, "labels": labels}
+    tag = f";{note}" if note else ""
+
+    fwd = jax.jit(lambda p, b: loss_fn(p, mcfg, b)[0])
+    us = time_jit(fwd, params, data)
+    emit(f"train/{im}/fwd", us, f"n={n};batch={batch}{tag}")
+
+    fwd_bwd = jax.jit(jax.value_and_grad(
+        lambda p, b: loss_fn(p, mcfg, b)[0]))
+    us_fb = time_jit(fwd_bwd, params, data)
+    emit(f"train/{im}/fwd_bwd", us_fb,
+         f"bwd_over_fwd={us_fb / max(us, 1e-9):.2f}{tag}")
+
+    opt_cfg = opt_lib.OptConfig(lr=3e-3, warmup=0, total_steps=steps,
+                                weight_decay=0.0)
+    step = make_train_step(mcfg, opt_cfg)
+    opt = opt_lib.init(params)
+    us_step = time_jit(lambda p, o, b: step(p, o, b)[2]["loss"],
+                       params, opt, data)
+    emit(f"train/{im}/step", us_step, f"optimizer=adamw{tag}")
+
+    p, o = params, opt
+    losses = []
+    for _ in range(steps):
+        p, o, metrics = step(p, o, data)
+        losses.append(float(metrics["loss"]))
+    emit(f"train/{im}/loss_drop", 0.0,
+         f"loss0={losses[0]:.4f};lossN={losses[-1]:.4f};steps={steps}")
+
+
+def run(quick: bool = True, impl: str | None = None, *,
+        n: int | None = None, th: int | None = None,
+        batch: int | None = None, steps: int | None = None):
+    impls = ([kops.resolve_impl(impl)] if impl is not None
+             else ["xla", "pallas"])
+    n = n or (192 if quick else 1024)
+    th = th or (32 if quick else 64)
+    batch = batch or (4 if quick else 16)
+    steps = steps or (3 if quick else 20)
+    note = "" if jax.default_backend() == "tpu" else "interpret_mode"
+    for im in impls:
+        _bench_impl(im, n=n, th=th, batch=batch, steps=steps,
+                    note=note if im == "pallas" else "")
+    return ",".join(impls)  # backend(s) that ran, for the JSON meta
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=192)
+    ap.add_argument("--th", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--impl", default=None, choices=["xla", "pallas"],
+                    help="default: both backends")
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="write BENCH_train.json into DIR")
+    args = ap.parse_args(argv)
+
+    from benchmarks import common
+    from benchmarks.run import _write_suite_json
+    import sys
+    import time
+
+    quick = args.n <= 512
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    ran = run(quick=quick, impl=args.impl, n=args.n, th=args.th,
+              batch=args.batch, steps=args.steps)
+    if args.json:
+        path = _write_suite_json(args.json, "train", common.ROWS,
+                                 {"quick": quick, "impl": ran,
+                                  "elapsed_s": round(time.time() - t0, 3),
+                                  "unix_time": int(t0)})
+        print(f"# wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

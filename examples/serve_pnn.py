@@ -67,9 +67,12 @@ def main():
                                            cfg.num_classes)
 
     st = engine.stats()
-    print(f"served {st['served']} clouds in {st['wall_s']:.2f}s: "
-          f"{st['clouds_per_s']:.2f} clouds/s "
-          f"({st['mpts_per_s']:.3g} Mpts/s)")
+    if st["clouds_per_s"] is None:   # no microbatch completed
+        print(f"served {st['served']} clouds (no completed window)")
+    else:
+        print(f"served {st['served']} clouds in {st['wall_s']:.2f}s: "
+              f"{st['clouds_per_s']:.2f} clouds/s "
+              f"({st['mpts_per_s']:.3g} Mpts/s)")
     for b, row in sorted(st["buckets"].items()):
         print(f"  bucket n={b}: {row['count']} clouds, "
               f"p50 {row['p50_ms']:.1f} / p95 {row['p95_ms']:.1f} / "

@@ -20,7 +20,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.common import NEG, select_coord
 
 
-def _fps_kernel(coords_ref, vmask_ref, idx_ref, mind_ref, *, k: int):
+def _fps_kernel(coords_ref, vmask_ref, idx_ref, mind_ref, prev_ref, *,
+                k: int):
     c = coords_ref[0]          # (3, BS)
     v = vmask_ref[0] > 0       # (1, BS)
     bs = c.shape[-1]
@@ -36,14 +37,20 @@ def _fps_kernel(coords_ref, vmask_ref, idx_ref, mind_ref, *, k: int):
     iot = lax.broadcasted_iota(jnp.int32, (1, bs), 1)
     mind = jnp.where(iot == start, NEG, mind)
     mind_ref[...] = mind
+    prev_ref[0] = start
     idx_ref[0, 0] = start
 
     def body(j, _):
         m = mind_ref[...]
-        nxt = jnp.argmax(m).astype(jnp.int32)
+        # Exhaustion contract (kernels/ref.py): unselected valid lanes
+        # hold d2 >= 0 > NEG, so an all-pinned vector means k exceeds the
+        # valid count — repeat the last valid selection.
+        nxt = jnp.where(jnp.max(m) > NEG,
+                        jnp.argmax(m).astype(jnp.int32), prev_ref[0])
         m = jnp.minimum(m, jnp.where(v, d2_to(nxt), NEG))
         m = jnp.where(iot == nxt, NEG, m)
         mind_ref[...] = m
+        prev_ref[0] = nxt
         idx_ref[0, j] = nxt
         return 0
 
@@ -66,6 +73,7 @@ def fps_blocks(coords: jax.Array, vmask: jax.Array, *, k: int,
         ],
         out_specs=pl.BlockSpec((1, k), lambda b: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, k), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((1, bs), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, bs), jnp.float32),
+                        pltpu.SMEM((1,), jnp.int32)],
         interpret=interpret,
     )(coords.astype(jnp.float32), vmask.astype(jnp.float32))

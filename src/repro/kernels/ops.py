@@ -25,8 +25,12 @@ inner functions (whose caches key on the concrete impl) — flipping
 stale jit cache.  Inside an outer jit, resolution still happens at that
 trace's time.
 
-The pallas impl is inference-only: no VJP rules are registered, so wrap
-training paths with ``impl="xla"`` (grads flow through the jnp oracle).
+Both impls are trainable end to end: every public wrapper carries a custom
+VJP (``kernels/vjp.py``) — ``gather_blocks`` differentiates in its features
+(backward = transposed one-hot scatter-add, dispatched like the forward),
+and FPS / ball query / kNN / fractal-level are non-differentiable index
+producers whose outputs carry zero cotangents.  One ``custom_vjp`` instance
+is cached per static-arg signature, so jit caches stay keyed the same way.
 """
 from __future__ import annotations
 
@@ -42,6 +46,7 @@ from repro.kernels import fractal_engine as _fe
 from repro.kernels import gather as _ga
 from repro.kernels import knn as _knn
 from repro.kernels import ref as _ref
+from repro.kernels import vjp as _vjp
 
 LANE = 128
 IMPLS = ("xla", "pallas")
@@ -133,11 +138,20 @@ def _chunked(fn, arrays, chunk):
     return jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:])[:nb], out)
 
 
+@functools.lru_cache(maxsize=None)
+def _fps_op(k, impl, chunk):
+    return _vjp.index_producer(
+        functools.partial(_fps_blocks, k=k, impl=impl, chunk=chunk))
+
+
 def fps_blocks(coords, mask, *, k: int, impl: str | None = None,
                chunk: int | None = None):
-    """coords (NB, BS, 3), mask (NB, BS) -> sampled in-block idx (NB, k)."""
-    return _fps_blocks(coords, mask, k=k, impl=resolve_impl(impl),
-                       chunk=chunk)
+    """coords (NB, BS, 3), mask (NB, BS) -> sampled in-block idx (NB, k).
+
+    If ``k`` exceeds a block's valid count, the exhausted slots repeat the
+    last valid selection (empty blocks repeat index 0) — both impls,
+    asserted in tests/test_point_impls.py."""
+    return _fps_op(k, resolve_impl(impl), chunk)(coords, mask)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "impl", "chunk"))
@@ -151,13 +165,20 @@ def _fps_blocks(coords, mask, *, k, impl, chunk):
     return _chunked(run, (coords, mask), chunk)
 
 
+@functools.lru_cache(maxsize=None)
+def _ball_query_op(radius, num, impl, chunk):
+    return _vjp.index_producer(
+        functools.partial(_ball_query_blocks, radius=radius, num=num,
+                          impl=impl, chunk=chunk))
+
+
 def ball_query_blocks(centers, cmask, window, wmask, *, radius: float,
                       num: int, impl: str | None = None,
                       chunk: int | None = None):
     """centers (NB,KC,3), cmask (NB,KC), window (NB,W,3), wmask (NB,W)
     -> (idx (NB,KC,num) local-to-window, d2 (NB,KC,num), cnt (NB,KC))."""
-    return _ball_query_blocks(centers, cmask, window, wmask, radius=radius,
-                              num=num, impl=resolve_impl(impl), chunk=chunk)
+    return _ball_query_op(radius, num, resolve_impl(impl), chunk)(
+        centers, cmask, window, wmask)
 
 
 @functools.partial(jax.jit,
@@ -181,12 +202,17 @@ def _ball_query_blocks(centers, cmask, window, wmask, *, radius, num, impl,
     return _chunked(run, (centers, cmask, window, wmask), chunk)
 
 
+@functools.lru_cache(maxsize=None)
+def _knn_op(k, impl, chunk):
+    return _vjp.index_producer(
+        functools.partial(_knn_blocks, k=k, impl=impl, chunk=chunk))
+
+
 def knn_blocks(queries, window, wmask, *, k: int, impl: str | None = None,
                chunk: int | None = None):
     """queries (NB,Q,3), window (NB,W,3), wmask (NB,W)
     -> (idx (NB,Q,k) local-to-window, d2 (NB,Q,k))."""
-    return _knn_blocks(queries, window, wmask, k=k, impl=resolve_impl(impl),
-                       chunk=chunk)
+    return _knn_op(k, resolve_impl(impl), chunk)(queries, window, wmask)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "impl", "chunk"))
@@ -206,11 +232,22 @@ def _knn_blocks(queries, window, wmask, *, k, impl, chunk):
     return _chunked(run, (queries, window, wmask), chunk)
 
 
+@functools.lru_cache(maxsize=None)
+def _gather_op(w, impl, chunk):
+    return _vjp.gathering(
+        functools.partial(_gather_blocks, impl=impl, chunk=chunk),
+        functools.partial(_gather_grad_blocks, w=w, impl=impl, chunk=chunk))
+
+
 def gather_blocks(window_feats, idx, *, impl: str | None = None,
                   chunk: int | None = None):
-    """window_feats (NB, W, C), idx (NB, M) local-to-window -> (NB, M, C)."""
-    return _gather_blocks(window_feats, idx, impl=resolve_impl(impl),
-                          chunk=chunk)
+    """window_feats (NB, W, C), idx (NB, M) local-to-window -> (NB, M, C).
+
+    Out-of-range idx (negative or >= W) fetches zeros, both impls — the
+    masked-invalid contract the backward mirrors by dropping those rows.
+    Differentiable in ``window_feats`` (kernels/vjp.py)."""
+    return _gather_op(window_feats.shape[-2], resolve_impl(impl), chunk)(
+        window_feats, idx)
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "chunk"))
@@ -228,12 +265,38 @@ def _gather_blocks(window_feats, idx, *, impl, chunk):
     return _chunked(run, (window_feats, idx), chunk)
 
 
+@functools.partial(jax.jit, static_argnames=("w", "impl", "chunk"))
+def _gather_grad_blocks(g, idx, *, w, impl, chunk):
+    """gather_blocks' backward dispatch: cotangent rows g (NB, M, C)
+    scatter-added at idx into (NB, W, C) window cotangents."""
+    c_out = g.shape[-1]
+
+    def run(g, idx):
+        if impl == "pallas":
+            gg = _pad_lanes(g, -1)                    # C on lanes
+            gg = _pad_lanes(gg, -2)                   # M: contraction dim,
+            ii = _pad_lanes(idx, -1, value=-1)        # padded rows dropped
+            out = _ga.scatter_add_blocks(gg, ii, w=w + (-w) % 8,
+                                         interpret=not _on_tpu())
+            return out[:, :w, :c_out]
+        return _ref.scatter_add_blocks(g, idx, w=w)
+
+    return _chunked(run, (g, idx), chunk)
+
+
+@functools.lru_cache(maxsize=None)
+def _fractal_level_op(da, db, impl, chunk):
+    return _vjp.index_producer(
+        functools.partial(_fractal_level_blocks, da=da, db=db, impl=impl,
+                          chunk=chunk))
+
+
 def fractal_level_blocks(coords, mask, mid, *, da: int, db: int,
                          impl: str | None = None, chunk: int | None = None):
     """coords (NB,BS,3), mask (NB,BS), mid (NB,) ->
     (side (NB,BS) i32, left_count (NB,), child_stats (NB,4))."""
-    return _fractal_level_blocks(coords, mask, mid, da=da, db=db,
-                                 impl=resolve_impl(impl), chunk=chunk)
+    return _fractal_level_op(da, db, resolve_impl(impl), chunk)(
+        coords, mask, mid)
 
 
 @functools.partial(jax.jit, static_argnames=("da", "db", "impl", "chunk"))

@@ -13,7 +13,12 @@ from repro.kernels.common import INF, NEG
 
 
 def _fps_one(coords, vmask, k):
-    """coords (3, BS), vmask (BS,) -> (k,) i32."""
+    """coords (3, BS), vmask (BS,) -> (k,) i32.
+
+    Exhaustion contract: once every valid point has been selected (k larger
+    than the block's valid count), the remaining slots *repeat the last
+    valid selection* instead of emitting whatever argmax of an all-pinned
+    vector lands on.  An empty block degenerates to repeating index 0."""
     c = coords.astype(jnp.float32)
     v = vmask > 0
     bs = c.shape[-1]
@@ -27,13 +32,16 @@ def _fps_one(coords, vmask, k):
     mind = jnp.where(v, d2_to(start), NEG)
     mind = jnp.where(iot == start, NEG, mind)
 
-    def step(m, _):
-        nxt = jnp.argmax(m).astype(jnp.int32)
+    def step(carry, _):
+        m, prev = carry
+        # Unselected valid lanes hold d2 >= 0 > NEG; all-pinned means done.
+        nxt = jnp.where(jnp.max(m) > NEG,
+                        jnp.argmax(m).astype(jnp.int32), prev)
         m = jnp.minimum(m, jnp.where(v, d2_to(nxt), NEG))
         m = jnp.where(iot == nxt, NEG, m)
-        return m, nxt
+        return (m, nxt), nxt
 
-    _, rest = jax.lax.scan(step, mind, None, length=k - 1)
+    _, rest = jax.lax.scan(step, (mind, start), None, length=k - 1)
     return jnp.concatenate([start[None], rest])
 
 
@@ -85,7 +93,30 @@ def knn_blocks(queries, window, wmask, *, k):
 
 
 def gather_blocks(window_feats, idx):
-    return jax.vmap(lambda f, i: f[i])(window_feats, idx)
+    """Out-of-range idx (negative or >= W) fetches zeros — the one-hot
+    kernel's contract, which the backward relies on to drop their rows."""
+    w = window_feats.shape[-2]
+
+    def one(f, i):
+        ok = (i >= 0) & (i < w)
+        return jnp.where(ok[:, None], f[jnp.clip(i, 0, w - 1)], 0)
+
+    return jax.vmap(one)(window_feats, idx)
+
+
+def scatter_add_blocks(g, idx, *, w):
+    """gather_blocks' backward oracle: g (NB, M, C), idx (NB, M) ->
+    (NB, W, C); out-of-range idx rows are dropped (their forward rows
+    fetched zeros)."""
+    c = g.shape[-1]
+
+    def one(gg, i):
+        ok = (i >= 0) & (i < w)
+        safe = jnp.clip(i, 0, w - 1)
+        return jnp.zeros((w, c), g.dtype).at[safe].add(
+            jnp.where(ok[:, None], gg, 0))
+
+    return jax.vmap(one)(g, idx)
 
 
 def fractal_level_blocks(coords, vmask, mid, *, da, db):

@@ -1,0 +1,82 @@
+"""Custom VJPs for the execute-phase dispatch ops (docs/DESIGN.md §4).
+
+The plan/execute split makes training cheap to support: the *plan* phase
+(core/bppo.py) is pure jnp index math and always differentiable, so only
+the execute ops need gradient rules — and of those, only the ops that move
+*features* carry useful cotangents.  The contract, uniform across impls:
+
+* ``gather_blocks`` differentiates in ``window_feats``; its backward is the
+  transposed one-hot scatter-add into the window tile (pallas: the same MXU
+  one-hot matmul as the forward, transposed; xla: a masked ``.at[].add``).
+  Out-of-range indices (negative, or >= W) fetched zeros in the forward, so
+  they receive nothing in the backward.
+* FPS / ball query / kNN / fractal-level are *index producers*: their
+  outputs (indices, counts, the d2 distances the plan layer turns into IDW
+  weights, split-side stats) are functions of coordinates only, never of
+  parameters, so they are declared non-differentiable — every output
+  carries a zero cotangent back to every input.  This is stop-gradient
+  semantics, applied at the dispatch layer so both backends agree under
+  ``jax.grad`` (tests/test_grads.py asserts the zero cotangents).
+
+These combinators are wired onto the public wrappers by ``kernels/ops.py``
+(one cached ``custom_vjp`` instance per static-arg signature); they take
+already-specialized callables so this module needs no knowledge of the
+dispatch layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def zero_cotangent(x):
+    """A zero cotangent matching ``x``: float zeros for inexact dtypes,
+    ``float0`` (the tangent type of ints/bools) otherwise."""
+    if jnp.issubdtype(jnp.result_type(x), jnp.inexact):
+        return jnp.zeros_like(x)
+    return np.zeros(jnp.shape(x), jax.dtypes.float0)
+
+
+def index_producer(fn):
+    """Wrap a specialized dispatch callable as a non-differentiable
+    index/plan producer: primal output of ``fn``, zero cotangents to every
+    input.  ``fn`` must be positional-only (statics already bound)."""
+
+    @jax.custom_vjp
+    def op(*args):
+        return fn(*args)
+
+    def fwd(*args):
+        # Residuals are the args themselves, used only for their shapes —
+        # zero_cotangent reads avals, not values, so jit DCEs the data
+        # dependence.
+        return fn(*args), args
+
+    def bwd(args, _g):
+        return tuple(zero_cotangent(a) for a in args)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def gathering(fwd_fn, bwd_fn):
+    """Wrap a specialized gather dispatch as differentiable-in-features.
+
+    ``fwd_fn(window_feats, idx) -> (NB, M, C)``;
+    ``bwd_fn(g, idx) -> (NB, W, C)`` scatter-adds the cotangent rows back
+    into the window tile (W is bound statically by the caller).  ``idx``
+    gets a float0 cotangent."""
+
+    @jax.custom_vjp
+    def op(window_feats, idx):
+        return fwd_fn(window_feats, idx)
+
+    def fwd(window_feats, idx):
+        return fwd_fn(window_feats, idx), idx
+
+    def bwd(idx, g):
+        return bwd_fn(g, idx), zero_cotangent(idx)
+
+    op.defvjp(fwd, bwd)
+    return op

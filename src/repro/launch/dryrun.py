@@ -13,6 +13,7 @@ Usage:
   python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
   python -m repro.launch.dryrun --all --multi-pod --out results.json
   python -m repro.launch.dryrun --arch pointnext --shape pnn_289k  # PNN cell
+  python -m repro.launch.dryrun --arch pointnext --shape pnn_33k --train
 """
 import argparse
 import json
@@ -282,6 +283,10 @@ def main(argv=None):
     ap.add_argument("--no-metrics", action="store_true")
     ap.add_argument("--impl", default=None, choices=["xla", "pallas"],
                     help="point-op execute backend for the PNN cells")
+    ap.add_argument("--train", action="store_true",
+                    help="lower the PNN fine-tune step (value_and_grad + "
+                         "AdamW) instead of the serving step — proves the "
+                         "backward pass compiles at production scale")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -310,8 +315,9 @@ def main(argv=None):
         for arch, shape in cells:
             try:
                 if arch in PNN_VARIANTS:
-                    rows.append(run_pnn_cell(arch, shape, multi_pod=mp,
-                                             impl=args.impl))
+                    rows.append(run_pnn_cell(
+                        arch, shape, multi_pod=mp, impl=args.impl,
+                        kind="train" if args.train else "serve"))
                 else:
                     rows.append(run_cell(arch, shape, multi_pod=mp,
                                          metrics=not args.no_metrics))

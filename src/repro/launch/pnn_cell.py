@@ -1,12 +1,17 @@
 """PNN dry-run cells — the paper's own workloads on the production mesh.
 
-The cell lowers a *serving* step (the paper is an inference accelerator):
-Fractal partition -> BPPO point ops -> PNN feature stages, for PointNeXt
-segmentation at S3DIS scale (33K / 289K points, paper Figs. 13/15/18).
+By default the cell lowers a *serving* step (the paper is an inference
+accelerator): Fractal partition -> BPPO point ops -> PNN feature stages,
+for PointNeXt segmentation at S3DIS scale (33K / 289K points, paper
+Figs. 13/15/18).  With ``kind="train"`` it lowers the *fine-tune* step
+instead — ``jax.value_and_grad`` through the same pipeline plus the AdamW
+update (the execute-phase VJPs of kernels/vjp.py make this valid for
+either impl) — proving the backward pass compiles at production scale.
 Sharding: clouds -> ``data``, fractal leaves -> ``model`` (the paper's
 inter-block parallelism promoted to chips; docs/DESIGN.md §6).
 
-Called from dryrun.py via ``--arch pointnext --shape pnn_289k``.
+Called from dryrun.py via ``--arch pointnext --shape pnn_289k``
+(``--train`` for the train cell).
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ from repro.dist import logical
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh
 from repro.models import pnn
+from repro.train import optimizer as opt_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,7 +76,7 @@ def _model_flops(cfg: pnn.PNNConfig, n: int, batch: int, params) -> float:
 def run_pnn_cell(variant: str, shape_name: str, *, multi_pod: bool = False,
                  verbose: bool = True, rules=None, leaf_chunk: int = 512,
                  point_ops: str = "bppo", impl: str | None = None,
-                 batch: int | None = None):
+                 batch: int | None = None, kind: str = "serve"):
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
     chips = mesh.devices.size
@@ -102,16 +108,39 @@ def run_pnn_cell(variant: str, shape_name: str, *, multi_pod: bool = False,
     cloud_sh = NamedSharding(
         mesh, P(batch_axes) if batch_axes else P())
     with logical.logical_rules(mesh, rules):
-        lowered = jax.jit(serve_step, in_shardings=(None, cloud_sh),
-                          out_shardings=cloud_sh).lower(params, clouds)
+        if kind == "train":
+            from repro.train.pnn import train_step_fn
+            labels = jax.ShapeDtypeStruct(
+                (shape.batch,) + ((shape.n_points,)
+                                  if cfg.task == "seg" else ()), jnp.int32)
+            opt_shapes = jax.eval_shape(opt_lib.init, params)
+            label_sh = NamedSharding(
+                mesh, P(batch_axes) if batch_axes else P())
+            # The exact step the trainer runs (train/pnn.py), lowered with
+            # the cell's shardings instead of its jit.
+            train_step = train_step_fn(cfg, opt_lib.OptConfig(warmup=0))
+            b_sh = {"points": cloud_sh, "labels": label_sh}
+            lowered = jax.jit(
+                train_step, in_shardings=(None, None, b_sh),
+                out_shardings=(None, None, None)).lower(
+                    params, opt_shapes, {"points": clouds,
+                                         "labels": labels})
+        else:
+            lowered = jax.jit(serve_step, in_shardings=(None, cloud_sh),
+                              out_shardings=cloud_sh).lower(params, clouds)
         compiled = lowered.compile()
 
-    row = rl.analyze(compiled, arch=variant, shape=shape_name,
+    model_flops = _model_flops(cfg, shape.n_points, shape.batch, params)
+    if kind == "train":
+        model_flops *= 3.0  # fwd + bwd, the usual 1:2 convention
+    row = rl.analyze(compiled, arch=variant,
+                     shape=f"{shape_name}_train" if kind == "train"
+                     else shape_name,
                      mesh_name=mesh_name, chips=chips,
-                     model_flops=_model_flops(cfg, shape.n_points,
-                                              shape.batch, params))
+                     model_flops=model_flops)
     d = row.to_dict()
     d["compile_s"] = time.time() - t0
+    d["kind"] = kind
     if verbose:
         mem = d["mem_per_device"]
         print(f"[dryrun:pnn] {variant} x {shape_name} on {mesh_name}: "

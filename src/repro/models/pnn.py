@@ -10,9 +10,11 @@ Point operations are selectable:
 
 With ``point_ops="bppo"`` the execute phase of every point op additionally
 dispatches through the kernel backend selected by ``PNNConfig.impl``:
-``"xla"`` (jnp oracle, differentiable) or ``"pallas"`` (TPU kernels,
-interpret off-TPU, inference-only); ``None`` resolves from
-``$REPRO_POINT_IMPL``.  See docs/DESIGN.md §4.
+``"xla"`` (jnp oracle) or ``"pallas"`` (TPU kernels, interpret off-TPU);
+``None`` resolves from ``$REPRO_POINT_IMPL``.  Both backends differentiate
+(kernels/vjp.py), so either is valid under ``jax.grad`` — training no
+longer needs to wrap the model with ``impl="xla"``.  See docs/DESIGN.md §4
+and ``train/pnn.py`` for the fine-tune loop.
 
 Variants (simplified but structurally faithful; see docs/DESIGN.md §8):
 * ``pointnet2``   — SA = group -> shared MLP -> max-pool.

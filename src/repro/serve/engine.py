@@ -212,18 +212,20 @@ class ServeEngine:
 
     def step(self, now: float | None = None) -> list[int]:
         """Dispatch every microbatch that is ready at ``now`` (full, or
-        past its deadline).  Returns the completed request ids."""
-        now = self._clock() if now is None else now
+        past its deadline).  Returns the completed request ids.
+
+        An injected ``now`` is threaded through to completion stamping, so
+        latencies stay in the caller's clock domain (see ``_execute``)."""
         done = []
-        for mb in self.queue.ready(now):
-            done.extend(self._execute(mb))
+        for mb in self.queue.ready(self._clock() if now is None else now):
+            done.extend(self._execute(mb, now=now))
         return done
 
-    def flush(self) -> list[int]:
+    def flush(self, now: float | None = None) -> list[int]:
         """Drain the queue (end of stream), deadline or not."""
         done = []
         for mb in self.queue.drain():
-            done.extend(self._execute(mb))
+            done.extend(self._execute(mb, now=now))
         return done
 
     def take(self, rid: int, default=None):
@@ -232,7 +234,13 @@ class ServeEngine:
         one array per request forever)."""
         return self.results.pop(rid, default)
 
-    def _execute(self, mb: MicroBatch) -> list[int]:
+    def _execute(self, mb: MicroBatch, now: float | None = None) -> list[int]:
+        """Run one microbatch.  ``now`` is the caller-injected logical time
+        (from ``step(now=)``/``flush(now=)``): when present, completions
+        are stamped with it so latencies and ``wall_s`` never mix the
+        injected clock domain with the engine's real clock; when absent,
+        the engine clock is read *after* execution so real latencies
+        include the forward."""
         bucket, reqs = mb.bucket, mb.requests
         npad = self.queue.microbatch - len(reqs)
         clouds = jnp.stack(
@@ -243,7 +251,7 @@ class ServeEngine:
         dim0 = jnp.asarray([r.dim0 for r in reqs] + [0] * npad, jnp.int32)
         out = self._forward(bucket, clouds, valid, dim0)
         jax.block_until_ready(out)
-        t_done = self._clock()
+        t_done = self._clock() if now is None else now
         out = np.asarray(out)
         rids = []
         for i, r in enumerate(reqs):
@@ -258,12 +266,22 @@ class ServeEngine:
 
     def stats(self) -> dict:
         """Per-bucket latency percentiles + sustained throughput + plan
-        cache counters (the BENCH_serve.json payload)."""
+        cache counters (the BENCH_serve.json payload).
+
+        Throughput (``wall_s``, ``clouds_per_s``, ``mpts_per_s``) is
+        ``None`` until at least one microbatch has completed *and* the
+        first-submit -> last-completion window has positive width: a
+        submit-only stream has no window at all, and an injected clock
+        can complete a batch at the very instant of its submit — either
+        way, dividing by an epsilon clamp would report absurd numbers
+        instead of "unknown" (benchmarks/serve_bench.py skips the None
+        rows)."""
         buckets = {}
         served, points = 0, 0
-        wall = 0.0
-        if self._t_first is not None and self._t_last is not None:
-            wall = max(self._t_last - self._t_first, 1e-9)
+        wall = None
+        if (self._t_first is not None and self._t_last is not None
+                and self._t_last > self._t_first):
+            wall = self._t_last - self._t_first
         for b, lat in self._lat.items():
             if not lat:
                 continue
@@ -277,10 +295,11 @@ class ServeEngine:
                 "p95_ms": float(np.percentile(ls, 95) * 1e3),
                 "p99_ms": float(np.percentile(ls, 99) * 1e3),
                 "mean_ms": float(ls.mean() * 1e3),
-                "clouds_per_s": len(ls) / wall if wall else 0.0,
+                "clouds_per_s": len(ls) / wall if wall is not None else None,
                 "compile_s": self.compile_s.get(b),
             }
         return {"impl": self.impl, "served": served, "wall_s": wall,
-                "clouds_per_s": served / wall if wall else 0.0,
-                "mpts_per_s": points / wall / 1e6 if wall else 0.0,
+                "clouds_per_s": served / wall if wall is not None else None,
+                "mpts_per_s": (points / wall / 1e6
+                               if wall is not None else None),
                 "buckets": buckets, "plan_cache": self.plans.stats()}

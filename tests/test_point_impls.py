@@ -105,6 +105,43 @@ def test_chunked_dispatch_matches_unchunked(impl):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_fps_exhaustion_repeats_last_valid(impl):
+    """Contract: k beyond a block's valid count repeats the *last valid*
+    selection (kernels/ref.py) instead of emitting garbage indices; empty
+    blocks degenerate to repeating index 0.  Both impls."""
+    coords, mask = blocks(11, 3, 40, empty_blocks=1)
+    mask = mask.at[1].set(jnp.arange(40) < 3)   # block 1: 3 valid points
+    idx = np.asarray(ops.fps_blocks(coords, mask, k=7, impl=impl))
+    assert (idx[0] == 0).all()                  # empty block
+    assert len(set(idx[1][:3])) == 3            # 3 distinct valid picks
+    assert set(idx[1][:3]) <= {0, 1, 2}
+    assert (idx[1][3:] == idx[1][2]).all()      # then repeat-last-valid
+    b = np.asarray(ops.fps_blocks(coords, mask, k=7,
+                                  impl="xla" if impl == "pallas"
+                                  else "pallas"))
+    np.testing.assert_array_equal(idx, b)       # impls agree exactly
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_gather_out_of_range_fetches_zeros(impl):
+    """Contract: idx outside [0, W) fetches zeros — the one-hot kernel's
+    natural behavior, which the ref oracle (and hence the VJP's dropped
+    backward rows) must match."""
+    rng = np.random.default_rng(12)
+    w = 33
+    feats = jnp.asarray(rng.normal(1, 1, (2, w, 5)).astype(np.float32))
+    idx = jnp.asarray([[-1, 0, w - 1, w, w + 90],
+                       [3, -7, 1, 2, w]], jnp.int32)
+    out = np.asarray(ops.gather_blocks(feats, idx, impl=impl))
+    ok = (np.asarray(idx) >= 0) & (np.asarray(idx) < w)
+    assert (out[~ok] == 0).all()
+    np.testing.assert_allclose(out[0, 1], np.asarray(feats[0, 0]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(out[0, 2], np.asarray(feats[0, w - 1]),
+                               rtol=1e-6)
+
+
 def test_resolve_impl(monkeypatch):
     monkeypatch.delenv("REPRO_POINT_IMPL", raising=False)
     assert ops.resolve_impl("xla") == "xla"

@@ -248,6 +248,63 @@ def test_impl_is_part_of_the_executable_key():
     assert eng.results[0].shape == (cfg.num_classes,)
 
 
+def test_injected_clock_latencies_exact():
+    """Clock-domain regression: latencies and wall_s must live entirely in
+    the caller's injected clock domain — _execute used to stamp t_done
+    from the engine's real clock even when submit/step carried ``now``,
+    mixing domains whenever a logical clock was injected."""
+    cfg = serve.ServeConfig(buckets=(64,), microbatch=2, max_wait_s=1.0,
+                            variant="pointnet2", task="cls", th=32,
+                            impl="xla")
+    eng = serve.ServeEngine(cfg)   # default (real) clock, never consulted
+    eng.warm()
+    r1 = eng.submit(cloud(40, 0), now=10.0)
+    r2 = eng.submit(cloud(64, 1), now=10.5)
+    assert sorted(eng.step(now=12.0)) == [r1, r2]     # full batch
+    st = eng.stats()
+    row = st["buckets"][64]
+    assert row["p50_ms"] == pytest.approx(1.75e3)     # (2.0 + 1.5) / 2
+    assert row["p99_ms"] == pytest.approx(2.0e3 - 0.25e3 * 0.02)
+    assert st["wall_s"] == pytest.approx(2.0)         # 12.0 - 10.0
+    assert st["clouds_per_s"] == pytest.approx(1.0)
+
+    # flush(now=) threads the injected time the same way
+    r3 = eng.submit(cloud(50, 2), now=20.0)
+    assert eng.flush(now=23.0) == [r3]
+    lat, _ = eng._lat[64][-1]
+    assert lat == pytest.approx(3.0)
+    assert eng.stats()["wall_s"] == pytest.approx(13.0)
+
+
+def test_throughput_none_until_first_completion():
+    """A submit-only stream has no completed window: stats() must report
+    None throughput rather than dividing by the 1e-9 clamp (which turned
+    an idle engine into an absurd clouds/s figure)."""
+    cfg = serve.ServeConfig(buckets=(64,), microbatch=4, max_wait_s=60.0,
+                            variant="pointnet2", task="cls", th=32,
+                            impl="xla")
+    eng = serve.ServeEngine(cfg, clock=FakeClock(5.0))
+    assert eng.stats()["clouds_per_s"] is None        # nothing at all
+    eng.submit(cloud(40))
+    assert eng.step() == []                           # partial, no deadline
+    st = eng.stats()
+    assert st["wall_s"] is None
+    assert st["clouds_per_s"] is None and st["mpts_per_s"] is None
+    assert st["buckets"] == {}
+    # a zero-width window (batch completed at the instant of its submit,
+    # injected clock) is still "unknown", not a clamp-divided absurdity
+    eng.flush(now=5.0)
+    st = eng.stats()
+    assert st["served"] == 1 and st["clouds_per_s"] is None
+    assert st["wall_s"] is None
+    # once the window has width the numbers come back
+    eng.submit(cloud(30), now=5.5)
+    assert eng.flush(now=6.0) != []
+    st = eng.stats()
+    assert st["clouds_per_s"] == pytest.approx(2.0)   # 2 clouds / 1.0 s
+    assert st["buckets"][64]["clouds_per_s"] == st["clouds_per_s"]
+
+
 def test_mesh_dispatch_matches_single_device():
     """mesh="auto" (elastic mesh over host devices, fit_specs-fitted
     microbatch sharding) returns the same logits as the mesh-free path."""
