@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Gate a fresh BENCH_<suite>.json against the committed snapshot.
+
+``benchmarks/history/`` holds one committed ``BENCH_<suite>.json`` per
+suite — the perf trajectory the repo promises.  CI regenerates the suite
+and runs::
+
+    python scripts/check_bench.py bench_out/BENCH_serve.json --tolerance 4.0
+
+Rows are matched by ``name``.  Both sides are clamped up to the
+``--min-us`` floor before the ratio is taken, so sub-floor jitter on
+shared CI runners never gates, while a genuinely fast row blowing up past
+the floor still does.  A row fails when the clamped ratio exceeds
+``tolerance``.  A row present in the snapshot but missing from the fresh run
+fails too — a benchmark silently disappearing is itself a regression.
+New rows are reported but pass (they have no baseline yet); commit them
+with ``--update``.
+
+``--update`` rewrites the snapshot from the fresh payload (the blessed
+way to move the baseline after a deliberate perf change).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+DEFAULT_HISTORY = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks", "history")
+
+
+def load_rows(payload: dict) -> dict:
+    return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+
+
+def compare(new: dict, old: dict, tolerance: float, min_us: float):
+    """Returns (failures, notes): failures gate, notes are informational."""
+    failures, notes = [], []
+    for name, old_us in sorted(old.items()):
+        if name not in new:
+            failures.append(f"{name}: in snapshot ({old_us:.1f} us) but "
+                            f"missing from the fresh run")
+            continue
+        new_us = new[name]
+        # Clamp to the floor: jitter among sub-floor timings never gates,
+        # but a fast row regressing far past the floor still does.
+        ratio = max(new_us, min_us) / max(old_us, min_us)
+        line = f"{name}: {old_us:.1f} -> {new_us:.1f} us ({ratio:.2f}x)"
+        if ratio > tolerance:
+            failures.append(line + f" exceeds tolerance {tolerance:.1f}x")
+        else:
+            notes.append(line)
+    for name in sorted(set(new) - set(old)):
+        notes.append(f"{name}: new row ({new[name]:.1f} us), no baseline "
+                     f"yet — commit with --update")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compare a fresh BENCH_<suite>.json to the committed "
+                    "snapshot in benchmarks/history/")
+    ap.add_argument("fresh", help="path to the freshly generated "
+                                  "BENCH_<suite>.json")
+    ap.add_argument("--history", default=DEFAULT_HISTORY,
+                    help="snapshot directory (default: benchmarks/history)")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="max allowed slowdown ratio (default 1.5; CI uses "
+                         "a generous 4.0 for shared runners)")
+    ap.add_argument("--min-us", type=float, default=200.0,
+                    help="noise floor: timings are clamped up to this "
+                         "before the ratio is taken (default 200)")
+    ap.add_argument("--update", action="store_true",
+                    help="bless the fresh payload as the new snapshot")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        payload = json.load(f)
+    suite = payload.get("suite") or os.path.basename(
+        args.fresh).removeprefix("BENCH_").removesuffix(".json")
+    snap_path = os.path.join(args.history, f"BENCH_{suite}.json")
+
+    if args.update or not os.path.exists(snap_path):
+        os.makedirs(args.history, exist_ok=True)
+        shutil.copyfile(args.fresh, snap_path)
+        verb = "updated" if args.update else "created (no prior snapshot)"
+        print(f"check_bench[{suite}]: {verb} {snap_path}")
+        return 0
+
+    with open(snap_path) as f:
+        snapshot = json.load(f)
+    failures, notes = compare(load_rows(payload), load_rows(snapshot),
+                              args.tolerance, args.min_us)
+    for line in notes:
+        print(f"check_bench[{suite}]: {line}")
+    for line in failures:
+        print(f"check_bench[{suite}]: FAIL {line}", file=sys.stderr)
+    print(f"check_bench[{suite}]: {len(failures)} failure(s), "
+          f"{len(notes)} row(s) ok (tolerance {args.tolerance:.1f}x, "
+          f"floor {args.min_us:.0f} us)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

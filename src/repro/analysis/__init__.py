@@ -1,0 +1,27 @@
+"""repro.analysis — contract linter + abstract interface checker.
+
+The repo's implicit invariants as a CI gate (docs/DESIGN.md §11):
+
+* **lint layer** (``walker`` + ``rules``): AST passes keyed by module zone
+  (``zones``) — clock-domain discipline, tracing safety, vjp completeness,
+  dispatch hygiene.  Findings print as ``file:line RULE-ID severity
+  message`` and are suppressible with ``# repolint: disable=RULE-ID``
+  pragmas (unused pragmas are themselves findings).
+* **abstract layer** (``abstract``): every public op in ``kernels/ops.py``
+  run under ``jax.eval_shape`` across a shape ladder x impl matrix,
+  checked against the ``kernels/ref.py`` oracle plus BlockSpec
+  divisibility and a VMEM footprint budget — interface parity with zero
+  kernel execution.
+
+Run ``python -m repro.analysis --strict`` (the CI leg), or lint specific
+files: ``python -m repro.analysis path/to/file.py``.
+"""
+from repro.analysis.report import ERROR, WARN, Finding  # noqa: F401
+from repro.analysis.walker import (lint_paths, lint_source,  # noqa: F401
+                                   lint_tree)
+from repro.analysis.zones import (RULE_DOC, RULE_SEVERITY,  # noqa: F401
+                                  RULE_ZONES, zone_of)
+
+__all__ = ["Finding", "ERROR", "WARN", "lint_source", "lint_paths",
+           "lint_tree", "zone_of", "RULE_DOC", "RULE_SEVERITY",
+           "RULE_ZONES"]

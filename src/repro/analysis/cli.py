@@ -1,0 +1,67 @@
+"""CLI: ``python -m repro.analysis [paths ...] [--strict] [...]``.
+
+With no paths, lints the whole ``src/repro`` tree and runs the abstract
+interface matrix (eval_shape only — no kernel executes); with explicit
+paths, lints just those files (fixtures, pre-commit hooks) and skips the
+abstract layer unless ``--abstract`` is passed.  Exit code 0 when clean,
+1 when findings fail (errors always; warnings too under ``--strict``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import report, walker, zones
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="FractalCloud contract linter + abstract interface "
+                    "checker (rule docs: docs/DESIGN.md §11)")
+    ap.add_argument("paths", nargs="*",
+                    help="files to lint (default: the src/repro tree)")
+    ap.add_argument("--strict", action="store_true",
+                    help="warnings fail too (the CI gate mode)")
+    ap.add_argument("--abstract", dest="abstract", action="store_true",
+                    default=None, help="force the eval_shape interface "
+                    "matrix on (default: on for tree runs, off for "
+                    "explicit paths)")
+    ap.add_argument("--no-abstract", dest="abstract", action="store_false",
+                    help="skip the eval_shape interface matrix")
+    ap.add_argument("--rules", default=None,
+                    help="comma list of rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(zones.RULE_DOC):
+            sev = zones.RULE_SEVERITY.get(rule, report.ERROR)
+            print(f"{rule}  {sev:5s}  {zones.RULE_DOC[rule]}")
+        return 0
+
+    only = (frozenset(r.strip() for r in args.rules.split(","))
+            if args.rules else None)
+    run_abstract = args.abstract
+    if run_abstract is None:
+        run_abstract = not args.paths
+
+    if args.paths:
+        findings = walker.lint_paths(args.paths, only=only)
+    else:
+        findings = walker.lint_tree(only=only)
+    if run_abstract:
+        from repro.analysis import abstract
+
+        findings += abstract.run_interface_checks()
+
+    findings = report.sort_findings(findings)
+    for f in findings:
+        print(f.format())
+    print(report.summarize(findings), file=sys.stderr)
+    return 1 if report.failed(findings, strict=args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

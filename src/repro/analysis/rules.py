@@ -1,0 +1,497 @@
+"""AST lint passes — one function per contract family.
+
+Each pass takes a parsed ``SourceFile`` and yields ``Finding``s; the walker
+has already decided which passes run in which zone (``zones.RULE_ZONES``)
+and applies pragma suppression afterwards.  The contracts themselves (and
+the PR bug that motivated each) are documented in docs/DESIGN.md §11.
+
+The tracing-safety pass (TRC002) carries a small static-name dataflow: in a
+jitted or Pallas-kernel function, names are *traced* unless they come from
+``static_argnames``, shape/ndim/dtype attributes, ``len()``, literals, or
+expressions built purely from those.  Branching on a traced name is the
+classic "works in interpret mode, fails under jit" bug.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.report import Finding
+from repro.analysis.walker import SourceFile
+from repro.analysis.zones import RULE_SEVERITY
+
+WALL_CLOCK_ATTRS = ("time", "monotonic", "perf_counter", "monotonic_ns",
+                    "perf_counter_ns", "process_time")
+
+# Hashable-by-construction annotation names lru_cache parameters may carry.
+STATIC_ANNOTATIONS = ("int", "str", "bool", "float", "bytes", "tuple",
+                      "frozenset", "type", "None", "Optional")
+
+# Attribute reads that yield static (Python-level) values even on tracers.
+STATIC_ATTRS = ("shape", "ndim", "dtype", "size", "sharding")
+
+# Builtins whose result is static when every argument is static; len() is
+# static unconditionally (len of a tracer is its leading dim).
+STATIC_CALLS = ("int", "float", "bool", "min", "max", "abs", "range",
+                "tuple", "sorted", "sum", "isinstance", "str")
+
+# Host-side / trace-breaking calls banned inside Pallas kernel bodies.
+KERNEL_BANNED_JNP = ("array", "asarray", "save", "load", "frombuffer",
+                     "fromfile")
+KERNEL_BANNED_JAX = ("device_put", "block_until_ready", "jit", "vmap",
+                     "pmap", "eval_shape", "make_jaxpr")
+
+
+def _finding(src: SourceFile, node, rule: str, message: str) -> Finding:
+    return Finding(path=src.path, line=node.lineno, rule=rule,
+                   severity=RULE_SEVERITY[rule], message=message)
+
+
+def _dotted(node):
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _func_params(fn: ast.FunctionDef):
+    a = fn.args
+    return a.posonlyargs + a.args + a.kwonlyargs
+
+
+def _walk_functions(tree):
+    """Yield (fn, enclosing_chain) for every function in the module."""
+    def rec(node, chain):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield child, chain
+                yield from rec(child, chain + (child,))
+            else:
+                yield from rec(child, chain)
+
+    yield from rec(tree, ())
+
+
+# -- clock-domain rules (CLK001/CLK002/CLK003) ----------------------------
+
+def check_clocks(src: SourceFile, active) -> list:
+    """Wall-clock *calls* are the hazard; references (``clock=time.time``
+    as an injectable default) are exactly the sanctioned pattern and are
+    never flagged.  One call yields at most one finding — the most
+    specific applicable rule wins (CLK001 > CLK002 > CLK003)."""
+    # Map each call site to its innermost enclosing function chain.
+    enclosing = {}
+    for fn, chain in _walk_functions(src.tree):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                cur = enclosing.get(id(node))
+                if cur is None or len(cur) < len(chain) + 1:
+                    enclosing[id(node)] = chain + (fn,)
+
+    out = []
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted is None or not dotted.startswith("time."):
+            continue
+        attr = dotted.split(".", 1)[1]
+        if attr not in WALL_CLOCK_ATTRS:
+            continue
+        chain = enclosing.get(id(node), ())
+        in_now_fn = any("now" in [p.arg for p in _func_params(f)]
+                        for f in chain)
+        if "CLK001" in active:
+            out.append(_finding(
+                src, node, "CLK001",
+                f"time.{attr}() in an injected-clock zone — time must "
+                f"enter through the engine clock (the PR-5 ServeEngine "
+                f"clock-mixing bug class); pass now= or use self._clock"))
+        elif in_now_fn and "CLK002" in active:
+            out.append(_finding(
+                src, node, "CLK002",
+                f"time.{attr}() inside a function taking now= — use the "
+                f"injected now instead of reading the wall clock"))
+        elif attr == "time" and "CLK003" in active:
+            out.append(_finding(
+                src, node, "CLK003",
+                "time.time() is not monotonic — use time.monotonic() for "
+                "intervals, or pragma with a justification if a wall-clock "
+                "timestamp is genuinely required"))
+    return out
+
+
+# -- tracing safety: lru_cache (TRC001) -----------------------------------
+
+def _is_lru_decorator(dec) -> bool:
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    dotted = _dotted(target) or ""
+    return dotted in ("functools.lru_cache", "lru_cache", "functools.cache",
+                      "cache")
+
+
+def _annotation_is_static(ann) -> bool:
+    if ann is None:
+        return False
+    if isinstance(ann, ast.Constant):       # None, or a string annotation
+        if isinstance(ann.value, str):
+            return all(tok.strip(" []|,.") in STATIC_ANNOTATIONS + ("",)
+                       for tok in ann.value.split("|"))
+        return ann.value is None
+    if isinstance(ann, ast.Name):
+        return ann.id in STATIC_ANNOTATIONS
+    if isinstance(ann, ast.Attribute):      # e.g. typing.Optional
+        return ann.attr in STATIC_ANNOTATIONS
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        return (_annotation_is_static(ann.left)
+                and _annotation_is_static(ann.right))
+    if isinstance(ann, ast.Subscript):      # tuple[int, ...], Optional[str]
+        return _annotation_is_static(ann.value)
+    return False
+
+
+def check_lru_cache(src: SourceFile, active) -> list:
+    """``functools.lru_cache`` keys on argument *hash*: a JAX array (or any
+    unhashable) argument either crashes or — worse, for weakref-hashable
+    objects — silently pins device memory and returns stale results.  The
+    machine-checkable contract: every cached parameter carries an
+    annotation that is hashable by construction."""
+    out = []
+    for fn, _chain in _walk_functions(src.tree):
+        if not any(_is_lru_decorator(d) for d in fn.decorator_list):
+            continue
+        if fn.args.vararg or fn.args.kwarg:
+            out.append(_finding(
+                src, fn, "TRC001",
+                f"lru_cache on '{fn.name}' with *args/**kwargs — cached "
+                f"signatures must be fully annotated static parameters"))
+            continue
+        for p in _func_params(fn):
+            if p.arg in ("self", "cls"):
+                continue
+            if not _annotation_is_static(p.annotation):
+                out.append(_finding(
+                    src, fn, "TRC001",
+                    f"lru_cache on '{fn.name}': parameter '{p.arg}' is not "
+                    f"annotated with a static hashable type (int/str/bool/"
+                    f"float/tuple/...) — a traced or array argument would "
+                    f"poison the cache"))
+    return out
+
+
+# -- tracing safety: traced-value branches (TRC002) -----------------------
+
+def _jit_static_argnames(fn: ast.FunctionDef):
+    """If ``fn`` is jit-decorated, return its static_argnames (possibly
+    empty); None if not jitted."""
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        dotted = _dotted(target) or ""
+        if dotted in ("jax.jit", "jit"):
+            names = []
+            if isinstance(dec, ast.Call):
+                for kw in dec.keywords:
+                    if kw.arg == "static_argnames":
+                        names = [e.value for e in ast.walk(kw.value)
+                                 if isinstance(e, ast.Constant)
+                                 and isinstance(e.value, str)]
+            return tuple(names)
+        if dotted in ("functools.partial", "partial") and \
+                isinstance(dec, ast.Call) and dec.args:
+            inner = _dotted(dec.args[0]) or ""
+            if inner in ("jax.jit", "jit"):
+                names = []
+                for kw in dec.keywords:
+                    if kw.arg == "static_argnames":
+                        names = [e.value for e in ast.walk(kw.value)
+                                 if isinstance(e, ast.Constant)
+                                 and isinstance(e.value, str)]
+                return tuple(names)
+    return None
+
+
+def _pallas_kernel_names(tree):
+    """Names of functions passed (possibly via functools.partial) as the
+    first argument to ``pl.pallas_call``."""
+    direct, via_partial = set(), {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            fdot = _dotted(node.value.func) or ""
+            if fdot in ("functools.partial", "partial") and node.value.args:
+                inner = _dotted(node.value.args[0])
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and inner:
+                        via_partial[t.id] = inner
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func) or ""
+        if not dotted.endswith("pallas_call") or not node.args:
+            continue
+        arg = node.args[0]
+        if isinstance(arg, ast.Name):
+            direct.add(via_partial.get(arg.id, arg.id))
+        elif isinstance(arg, ast.Call):
+            fdot = _dotted(arg.func) or ""
+            if fdot in ("functools.partial", "partial") and arg.args:
+                inner = _dotted(arg.args[0])
+                if inner:
+                    direct.add(inner)
+    return direct
+
+
+class _TracedFlow:
+    """Minimal dataflow over one function body: which local names are
+    (possibly) traced values.  Unknown constructs default to *static* —
+    the pass only flags branches that provably reference a traced name,
+    keeping it a CI gate without false positives."""
+
+    def __init__(self, traced):
+        self.traced = set(traced)
+
+    def refs_traced(self, node) -> bool:
+        if node is None or isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.traced
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False                      # x.shape is static
+            return self.refs_traced(node.value)
+        if isinstance(node, ast.Call):
+            dotted = _dotted(node.func) or ""
+            if dotted == "len":
+                return False                      # len(tracer) is static
+            if dotted in STATIC_CALLS:
+                return any(self.refs_traced(a) for a in node.args)
+            return (self.refs_traced(node.func)
+                    or any(self.refs_traced(a) for a in node.args)
+                    or any(self.refs_traced(k.value)
+                           for k in node.keywords))
+        return any(self.refs_traced(c) for c in ast.iter_child_nodes(node))
+
+    def _bind(self, target, is_traced: bool):
+        for n in ast.walk(target):
+            if isinstance(n, ast.Name):
+                (self.traced.add if is_traced
+                 else self.traced.discard)(n.id)
+
+    def scan(self, src, body, out):
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # Nested defs (dispatch closures, kernel helpers): their
+                # parameters receive traced values at call sites we don't
+                # track, so treat them as traced; statics flow in via
+                # closure from the enclosing scope.
+                inner = _TracedFlow(self.traced
+                                    | {p.arg for p in _func_params(stmt)})
+                inner.scan(src, stmt.body, out)
+                continue
+            if isinstance(stmt, (ast.If, ast.While)):
+                if self.refs_traced(stmt.test):
+                    out.append(_finding(
+                        src, stmt, "TRC002",
+                        f"Python {'if' if isinstance(stmt, ast.If) else 'while'}"
+                        f" on a traced value inside a jit/kernel function — "
+                        f"control flow must be shape-static (use lax.cond/"
+                        f"lax.select or hoist to a static argument)"))
+                self.scan(src, stmt.body, out)
+                self.scan(src, getattr(stmt, "orelse", []), out)
+                continue
+            if isinstance(stmt, ast.Assign):
+                t = self.refs_traced(stmt.value)
+                for target in stmt.targets:
+                    self._bind(target, t)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                self._bind(stmt.target, self.refs_traced(stmt.value))
+            elif isinstance(stmt, ast.AugAssign):
+                if self.refs_traced(stmt.value):
+                    self._bind(stmt.target, True)
+            elif isinstance(stmt, ast.For):
+                self._bind(stmt.target, self.refs_traced(stmt.iter))
+                self.scan(src, stmt.body, out)
+                self.scan(src, stmt.orelse, out)
+            elif isinstance(stmt, ast.With):
+                self.scan(src, stmt.body, out)
+            elif isinstance(stmt, ast.Try):
+                for blk in (stmt.body, stmt.orelse, stmt.finalbody):
+                    self.scan(src, blk, out)
+                for h in stmt.handlers:
+                    self.scan(src, h.body, out)
+
+
+def check_traced_branches(src: SourceFile, active) -> list:
+    """TRC002 over every jit-decorated function and Pallas kernel body."""
+    kernels = _pallas_kernel_names(src.tree)
+    out = []
+    for fn, chain in _walk_functions(src.tree):
+        if chain:
+            continue                       # nested defs handled by scan()
+        statics = _jit_static_argnames(fn)
+        if statics is not None:
+            traced = {p.arg for p in _func_params(fn)
+                      if p.arg not in statics}
+        elif fn.name in kernels:
+            # Kernel body: positional params are Refs (traced); kw-only
+            # params are bound statically via functools.partial.
+            traced = {p.arg for p in
+                      fn.args.posonlyargs + fn.args.args}
+        else:
+            continue
+        _TracedFlow(traced).scan(src, fn.body, out)
+    return out
+
+
+# -- tracing safety: host-side ops in kernel bodies (TRC003) --------------
+
+def check_kernel_host_ops(src: SourceFile, active) -> list:
+    """Pallas kernel bodies run on-core: host numpy and host-side jax ops
+    (device_put, block_until_ready, nested jit, ...) cannot appear there,
+    and device constants must not be materialized inside the body (plain
+    Python scalars + iota only — see kernels/common.py)."""
+    kernels = _pallas_kernel_names(src.tree)
+    out = []
+    for fn, _chain in _walk_functions(src.tree):
+        if fn.name not in kernels:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func) or ""
+            parts = dotted.split(".")
+            if parts[0] in ("np", "numpy") and len(parts) > 1:
+                out.append(_finding(
+                    src, node, "TRC003",
+                    f"host numpy call '{dotted}' inside Pallas kernel "
+                    f"'{fn.name}' — kernel bodies are traced on-core; use "
+                    f"jnp/lax on ref values"))
+            elif parts[0] == "jnp" and len(parts) == 2 and \
+                    parts[1] in KERNEL_BANNED_JNP:
+                out.append(_finding(
+                    src, node, "TRC003",
+                    f"'{dotted}' inside Pallas kernel '{fn.name}' — kernel "
+                    f"bodies may not materialize/capture host arrays "
+                    f"(kernels/common.py: plain Python scalars only)"))
+            elif parts[0] == "jax" and len(parts) == 2 and \
+                    parts[1] in KERNEL_BANNED_JAX:
+                out.append(_finding(
+                    src, node, "TRC003",
+                    f"host-side '{dotted}' inside Pallas kernel "
+                    f"'{fn.name}'"))
+    return out
+
+
+# -- vjp completeness + dispatch hygiene (VJP001/DSP001) ------------------
+
+def _public_op_wrappers(tree):
+    """Module-level public functions with a keyword-only ``impl`` param —
+    the dispatch layer's op-wrapper signature."""
+    for node in ast.iter_child_nodes(tree):
+        if isinstance(node, ast.FunctionDef) and \
+                not node.name.startswith("_") and \
+                any(p.arg == "impl" for p in node.args.kwonlyargs):
+            yield node
+
+
+def _vjp_factories(tree):
+    """Names of module functions whose body returns a kernels/vjp.py
+    classification (``index_producer`` / ``gathering``)."""
+    names = set()
+    for fn, _chain in _walk_functions(tree):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Return) and \
+                    isinstance(node.value, ast.Call):
+                dotted = _dotted(node.value.func) or ""
+                if dotted.split(".")[-1] in ("index_producer", "gathering"):
+                    names.add(fn.name)
+    return names
+
+
+def check_vjp_completeness(src: SourceFile, active) -> list:
+    """Every public op must route through a classified custom_vjp factory:
+    new ops cannot silently ship forward-only (the gap PR 5 closed)."""
+    factories = _vjp_factories(src.tree)
+    out = []
+    for fn in _public_op_wrappers(src.tree):
+        calls = {(_dotted(n.func) or "").split(".")[-1]
+                 for n in ast.walk(fn) if isinstance(n, ast.Call)}
+        if not (calls & factories) and \
+                not (calls & {"index_producer", "gathering"}):
+            out.append(_finding(
+                src, fn, "VJP001",
+                f"public op '{fn.name}' is not classified via "
+                f"kernels/vjp.py (index_producer | gathering) — it would "
+                f"ship without a backward contract"))
+    return out
+
+
+def check_dispatch_hygiene(src: SourceFile, active) -> list:
+    """DSP001: public ops take ``impl=None`` and resolve it through
+    ``resolve_impl`` (explicit arg > $REPRO_POINT_IMPL > default) — a
+    hardcoded default would bifurcate the executable cache."""
+    out = []
+    for fn in _public_op_wrappers(src.tree):
+        kw = {p.arg: d for p, d in
+              zip(fn.args.kwonlyargs, fn.args.kw_defaults)}
+        d = kw.get("impl")
+        if not (isinstance(d, ast.Constant) and d.value is None):
+            out.append(_finding(
+                src, fn, "DSP001",
+                f"public op '{fn.name}': impl= must default to None "
+                f"(resolved via resolve_impl), not a hardcoded backend"))
+        calls = {(_dotted(n.func) or "").split(".")[-1]
+                 for n in ast.walk(fn) if isinstance(n, ast.Call)}
+        if fn.name != "resolve_impl" and "resolve_impl" not in calls:
+            out.append(_finding(
+                src, fn, "DSP001",
+                f"public op '{fn.name}' does not route impl through "
+                f"resolve_impl() — env-default resolution must happen "
+                f"eagerly in the wrapper, before the jitted inner fn"))
+    return out
+
+
+def check_impl_literals(src: SourceFile, active) -> list:
+    """DSP002: outside the kernel layer, ``impl=`` must thread from config
+    (PNNConfig / ServeConfig / CLI), never a hardcoded string literal —
+    a literal pins one backend and splits it from the executable-cache
+    key discipline."""
+    out = []
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kwarg in node.keywords:
+            if kwarg.arg == "impl" and isinstance(kwarg.value, ast.Constant) \
+                    and isinstance(kwarg.value.value, str):
+                out.append(_finding(
+                    src, node, "DSP002",
+                    f"hardcoded impl={kwarg.value.value!r} — thread the "
+                    f"backend from config instead of pinning it at the "
+                    f"call site"))
+    return out
+
+
+# -- registry --------------------------------------------------------------
+
+# pass -> the rule ids it can emit (a pass runs iff any of them is active).
+_PASSES = (
+    (check_clocks, ("CLK001", "CLK002", "CLK003")),
+    (check_lru_cache, ("TRC001",)),
+    (check_traced_branches, ("TRC002",)),
+    (check_kernel_host_ops, ("TRC003",)),
+    (check_vjp_completeness, ("VJP001",)),
+    (check_dispatch_hygiene, ("DSP001",)),
+    (check_impl_literals, ("DSP002",)),
+)
+
+
+def run_rules(src: SourceFile, active: frozenset) -> list:
+    findings = []
+    for fn, rules in _PASSES:
+        if any(r in active for r in rules):
+            findings.extend(f for f in fn(src, active)
+                            if f.rule in active)
+    return findings

@@ -1,0 +1,93 @@
+"""Zone config: which contract applies where.
+
+The repo's invariants are zonal, not global — the injected-clock discipline
+binds ``serve/`` and ``scene/`` (the subsystems whose tests drive logical
+clocks), the tracing-safety rules bind the kernel layer, the vjp/dispatch
+contracts bind exactly ``kernels/ops.py``.  This module maps source paths
+to zone names and zone names to the rule ids that run there, so a rule pass
+never needs path logic of its own.
+
+Fixture files (and any file outside ``src/repro``) can pin their zone with
+a directive comment on any line::
+
+    # repolint: zone=serve
+
+Rule ids, the contract each encodes, and the PR whose bug motivated it are
+documented in docs/DESIGN.md §11.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.analysis.report import ERROR, WARN
+
+# Zone of src/repro/kernels/ops.py: the dispatch layer carries contracts
+# (vjp classification, impl threading) that the kernel modules don't.
+KERNEL_OPS = "kernels.ops"
+
+ZONES = ("core", "kernels", KERNEL_OPS, "models", "serve", "scene", "train",
+         "launch", "dist", "lm", "data", "configs", "analysis", "other")
+
+_ALL = frozenset(ZONES)
+_KERNELY = frozenset({"kernels", KERNEL_OPS})
+
+# rule id -> zones where the pass runs.  PRG001 (unused pragma) is emitted
+# by the walker itself and applies everywhere.
+RULE_ZONES = {
+    "CLK001": frozenset({"serve", "scene"}),
+    "CLK002": _ALL,
+    "CLK003": _ALL,
+    "TRC001": _ALL,
+    "TRC002": _KERNELY,
+    "TRC003": _KERNELY,
+    "VJP001": frozenset({KERNEL_OPS}),
+    "DSP001": frozenset({KERNEL_OPS}),
+    "DSP002": _ALL - _KERNELY,
+    "PRG001": _ALL,
+}
+
+# CLK003 is a warning: time.time() outside the clock-disciplined zones is a
+# style hazard (non-monotonic intervals), not a correctness bug by itself.
+# --strict (the CI leg) still fails on it.
+RULE_SEVERITY = {rule: (WARN if rule == "CLK003" else ERROR)
+                 for rule in RULE_ZONES}
+
+RULE_DOC = {
+    "CLK001": "wall-clock call in an injected-clock zone (serve/, scene/)",
+    "CLK002": "wall-clock call inside a function taking a now= parameter",
+    "CLK003": "time.time() wall clock (use time.monotonic or inject a clock)",
+    "TRC001": "lru_cache over parameters that are not statically hashable",
+    "TRC002": "Python if/while on a traced value in a jit/kernel function",
+    "TRC003": "host-side jnp/np op inside a Pallas kernel body",
+    "VJP001": "public kernel op without a kernels/vjp.py classification",
+    "DSP001": "dispatch hygiene: impl must default None via resolve_impl",
+    "DSP002": "hardcoded impl= literal outside the kernel layer",
+    "PRG001": "unused '# repolint: disable=' pragma",
+    # Abstract interface checks (emitted by abstract.py, not the AST lint).
+    "ABS001": "eval_shape parity break across the impl x chunk matrix",
+    "ABS002": "public wrapper spec disagrees with the kernels/ref.py oracle",
+    "ABS003": "declared VMEM tile violates BlockSpec divisibility/alignment",
+    "ABS004": "kernel VMEM footprint exceeds the per-core budget",
+}
+
+_ZONE_DIRECTIVE = re.compile(r"#\s*repolint:\s*zone=([a-z.]+)")
+
+
+def zone_of(path: str, text: str = "") -> str:
+    """Classify a source path (directive comment wins over path layout)."""
+    m = _ZONE_DIRECTIVE.search(text)
+    if m and m.group(1) in _ALL:
+        return m.group(1)
+    norm = str(path).replace("\\", "/")
+    if norm.endswith("src/repro/kernels/ops.py"):
+        return KERNEL_OPS
+    parts = norm.split("/")
+    if "repro" in parts:
+        i = len(parts) - 1 - parts[::-1].index("repro")  # last 'repro' seg
+        if i + 1 < len(parts) - 1 and parts[i + 1] in _ALL:
+            return parts[i + 1]
+    return "other"
+
+
+def rules_for(zone: str):
+    return frozenset(r for r, zs in RULE_ZONES.items() if zone in zs)

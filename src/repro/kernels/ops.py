@@ -139,7 +139,7 @@ def _chunked(fn, arrays, chunk):
 
 
 @functools.lru_cache(maxsize=None)
-def _fps_op(k, impl, chunk):
+def _fps_op(k: int, impl: str, chunk: int | None):
     return _vjp.index_producer(
         functools.partial(_fps_blocks, k=k, impl=impl, chunk=chunk))
 
@@ -166,7 +166,7 @@ def _fps_blocks(coords, mask, *, k, impl, chunk):
 
 
 @functools.lru_cache(maxsize=None)
-def _ball_query_op(radius, num, impl, chunk):
+def _ball_query_op(radius: float, num: int, impl: str, chunk: int | None):
     return _vjp.index_producer(
         functools.partial(_ball_query_blocks, radius=radius, num=num,
                           impl=impl, chunk=chunk))
@@ -203,7 +203,7 @@ def _ball_query_blocks(centers, cmask, window, wmask, *, radius, num, impl,
 
 
 @functools.lru_cache(maxsize=None)
-def _knn_op(k, impl, chunk):
+def _knn_op(k: int, impl: str, chunk: int | None):
     return _vjp.index_producer(
         functools.partial(_knn_blocks, k=k, impl=impl, chunk=chunk))
 
@@ -233,7 +233,7 @@ def _knn_blocks(queries, window, wmask, *, k, impl, chunk):
 
 
 @functools.lru_cache(maxsize=None)
-def _gather_op(w, impl, chunk):
+def _gather_op(w: int, impl: str, chunk: int | None):
     return _vjp.gathering(
         functools.partial(_gather_blocks, impl=impl, chunk=chunk),
         functools.partial(_gather_grad_blocks, w=w, impl=impl, chunk=chunk))
@@ -285,7 +285,7 @@ def _gather_grad_blocks(g, idx, *, w, impl, chunk):
 
 
 @functools.lru_cache(maxsize=None)
-def _fractal_level_op(da, db, impl, chunk):
+def _fractal_level_op(da: int, db: int, impl: str, chunk: int | None):
     return _vjp.index_producer(
         functools.partial(_fractal_level_blocks, da=da, db=db, impl=impl,
                           chunk=chunk))

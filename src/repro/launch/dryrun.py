@@ -222,7 +222,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                 "skipped": why}
 
-    t0 = time.time()
+    t0 = time.monotonic()
     param_shapes, _ = steps_lib.eval_shape_init(cfg)
     n_active = rl.active_params(cfg, param_shapes)
     n_total = rl.count_params(param_shapes)
@@ -232,7 +232,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     full = _compile_cell(cfg, shape, mesh, rules, opt_overrides,
                          microbatch=microbatch if microbatch is not None
                          else MICROBATCH.get(arch, 1))
-    t_full = time.time() - t0
+    t_full = time.monotonic() - t0
     if metrics:
         m1 = _metrics_of(_compile_cell(_metric_cfg(cfg, shape, 1), shape,
                                        mesh, rules, opt_overrides))
@@ -256,7 +256,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                       coll_count=fitted["cnt"], model_flops=model_flops,
                       mem_per_device=mem)
     d = row.to_dict()
-    d.update({"compile_s": time.time() - t0, "compile_full_s": t_full,
+    d.update({"compile_s": time.monotonic() - t0, "compile_full_s": t_full,
               "n_params": n_total, "n_active": n_active,
               "metrics_mode": "fitted" if metrics else "raw"})
     if verbose:

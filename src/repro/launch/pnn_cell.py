@@ -87,7 +87,7 @@ def run_pnn_cell(variant: str, shape_name: str, *, multi_pod: bool = False,
                                 th=shape.th, impl=impl)
     cfg = dataclasses.replace(cfg, leaf_chunk=leaf_chunk)
 
-    t0 = time.time()
+    t0 = time.monotonic()
     params = jax.eval_shape(
         lambda: pnn.init(jax.random.PRNGKey(0), cfg))
     clouds = jax.ShapeDtypeStruct((shape.batch, shape.n_points, 3),
@@ -139,7 +139,7 @@ def run_pnn_cell(variant: str, shape_name: str, *, multi_pod: bool = False,
                      mesh_name=mesh_name, chips=chips,
                      model_flops=model_flops)
     d = row.to_dict()
-    d["compile_s"] = time.time() - t0
+    d["compile_s"] = time.monotonic() - t0
     d["kind"] = kind
     if verbose:
         mem = d["mem_per_device"]

@@ -47,21 +47,21 @@ def main(argv=None):
                                                  max_len=max_len))
         decode = jax.jit(lambda p, t, c, pos: M.decode_step(p, cfg, t, c,
                                                             pos))
-        t0 = time.time()
+        t0 = time.monotonic()
         logits, cache = prefill(params, toks)
         jax.block_until_ready(logits)
-        t_prefill = time.time() - t0
+        t_prefill = time.monotonic() - t0
 
         out = []
         nxt = jnp.argmax(logits, -1)
-        t0 = time.time()
+        t0 = time.monotonic()
         for i in range(args.max_new):
             out.append(nxt)
             logits, cache = decode(params, nxt, cache,
                                    jnp.int32(args.prompt_len + i))
             nxt = jnp.argmax(logits, -1)
         jax.block_until_ready(nxt)
-        t_decode = time.time() - t0
+        t_decode = time.monotonic() - t0
 
     gen = jnp.concatenate(out, axis=1)
     print(f"[serve] {cfg.name}: prefill {args.prompt_len} toks in "

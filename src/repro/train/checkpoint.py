@@ -59,8 +59,10 @@ def save(ckpt_dir: str, step: int, tree, extra: dict | None = None,
 
     arrays = {k: to_np(v) for k, v in flat.items()}
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-    manifest = {"step": step, "time": time.time(), "extra": extra or {},
-                "keys": sorted(arrays)}
+    # Manifest timestamps are read by other processes/hosts (restore
+    # tooling, GC-by-age), so wall clock is the correct domain here.
+    manifest = {"step": step, "time": time.time(),  # repolint: disable=CLK003
+                "extra": extra or {}, "keys": sorted(arrays)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):

@@ -59,7 +59,7 @@ def run(loop_cfg: LoopConfig, *, init_params: Callable,
             saver and saver.wait()
             raise RuntimeError(f"injected failure at step {step}")
         batch = next_batch(step)
-        t0 = time.time()
+        t0 = time.monotonic()
         if residual is not None:
             # grad-compression path: train_step returns grads for EF wrap
             grads, metrics = train_step(params, opt_state, batch,
@@ -73,7 +73,7 @@ def run(loop_cfg: LoopConfig, *, init_params: Callable,
         else:
             params, opt_state, metrics = train_step(params, opt_state, batch)
         jax.block_until_ready(metrics["loss"])
-        dt = time.time() - t0
+        dt = time.monotonic() - t0
         straggler = monitor.record(step, dt)
         history.append({"step": step, "dt": dt,
                         "loss": float(metrics["loss"]),

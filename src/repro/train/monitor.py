@@ -49,13 +49,20 @@ class StepMonitor:
 
 
 class HeartbeatFile:
-    def __init__(self, path: str, every: float = 10.0):
+    """Liveness file for an external watchdog.  The stamped time must be
+    *wall* clock (the watchdog is a different process, so a monotonic
+    reading would be meaningless to it) — but it enters through an
+    injectable ``clock`` so tests and replayed traces stay deterministic,
+    the same discipline ServeEngine uses (docs/DESIGN.md §11)."""
+
+    def __init__(self, path: str, every: float = 10.0, clock=time.time):
         self.path = path
         self.every = every
+        self._clock = clock
         self._last = 0.0
 
     def beat(self, step: int, payload=None):
-        now = time.time()
+        now = self._clock()
         if now - self._last < self.every:
             return
         self._last = now
@@ -66,10 +73,11 @@ class HeartbeatFile:
         os.replace(tmp, self.path)
 
     @staticmethod
-    def is_alive(path: str, timeout: float = 60.0) -> bool:
+    def is_alive(path: str, timeout: float = 60.0,
+                 clock=time.time) -> bool:
         try:
             with open(path) as f:
                 data = json.load(f)
-            return time.time() - data["time"] < timeout
+            return clock() - data["time"] < timeout
         except (OSError, ValueError, KeyError):
             return False

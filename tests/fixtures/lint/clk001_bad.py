@@ -1,0 +1,7 @@
+# repolint: zone=serve
+"""Bad: wall-clock read inside an injected-clock zone (the PR-5 bug)."""
+import time
+
+
+def latency(start):
+    return time.monotonic() - start

@@ -1,0 +1,9 @@
+# repolint: zone=train
+"""Bad: a function that accepts ``now=`` but reads the wall clock anyway —
+callers injecting a logical time silently get mixed clock domains."""
+import time
+
+
+def expire(entries, now=0.0):
+    cutoff = time.monotonic() - 60.0
+    return [e for e in entries if e > cutoff]

@@ -1,0 +1,7 @@
+# repolint: zone=train
+"""Good: the injected ``now`` is the only time source in the function."""
+
+
+def expire(entries, now=0.0):
+    cutoff = now - 60.0
+    return [e for e in entries if e > cutoff]

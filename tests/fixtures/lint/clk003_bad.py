@@ -1,0 +1,9 @@
+# repolint: zone=train
+"""Bad: time.time() for an interval — not monotonic, NTP steps skew it."""
+import time
+
+
+def step_time(fn):
+    t0 = time.time()
+    fn()
+    return time.time() - t0

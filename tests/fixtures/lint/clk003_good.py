@@ -1,0 +1,9 @@
+# repolint: zone=train
+"""Good: intervals come from the monotonic clock."""
+import time
+
+
+def step_time(fn):
+    t0 = time.monotonic()
+    fn()
+    return time.monotonic() - t0

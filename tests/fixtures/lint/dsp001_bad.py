@@ -1,0 +1,8 @@
+# repolint: zone=kernels.ops
+"""Bad: impl pinned to a backend at the signature and never resolved —
+bifurcates the executable cache and ignores $REPRO_POINT_IMPL."""
+from repro.kernels import vjp
+
+
+def pinned_blocks(points, *, impl="pallas"):
+    return vjp.index_producer(lambda pts: pts)(points)

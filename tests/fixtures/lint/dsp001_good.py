@@ -1,0 +1,9 @@
+# repolint: zone=kernels.ops
+"""Good: impl defaults to None and resolves through resolve_impl()."""
+from repro.kernels import vjp
+from repro.kernels.ops import resolve_impl
+
+
+def routed_blocks(points, *, impl: str | None = None):
+    impl = resolve_impl(impl)
+    return vjp.index_producer(lambda pts: pts)(points)

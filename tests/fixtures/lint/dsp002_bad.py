@@ -1,0 +1,7 @@
+# repolint: zone=serve
+"""Bad: a hardcoded impl= literal outside the kernel layer pins one
+backend instead of threading it from config."""
+
+
+def plan(engine, points):
+    return engine.run(points, impl="pallas")

@@ -1,0 +1,6 @@
+# repolint: zone=serve
+"""Good: the backend threads from config through the call site."""
+
+
+def plan(engine, points, cfg):
+    return engine.run(points, impl=cfg.impl)

@@ -1,0 +1,8 @@
+# repolint: zone=train
+"""A justified pragma: the timestamp is read by another process, so wall
+clock is the correct domain — the suppression is used, hence clean."""
+import time
+
+
+def stamp():
+    return time.time()  # repolint: disable=CLK003

@@ -1,0 +1,8 @@
+# repolint: zone=train
+"""A stale pragma: nothing on the line violates CLK003 anymore, so the
+suppression itself is flagged (PRG001) and cannot linger."""
+import time
+
+
+def stamp():
+    return time.monotonic()  # repolint: disable=CLK003

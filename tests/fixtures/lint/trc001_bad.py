@@ -1,0 +1,9 @@
+# repolint: zone=kernels
+"""Bad: lru_cache over an unannotated parameter — a traced/array argument
+would poison the cache (crash, or pin device memory + stale results)."""
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _op(k, impl: str):
+    return (k, impl)

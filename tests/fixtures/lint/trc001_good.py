@@ -1,0 +1,8 @@
+# repolint: zone=kernels
+"""Good: every cached parameter is annotated hashable-by-construction."""
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _op(k: int, impl: str, chunk: int | None):
+    return (k, impl, chunk)

@@ -1,0 +1,11 @@
+# repolint: zone=kernels
+"""Bad: Python branch on a traced value inside a jitted function — works in
+interpret mode, raises TracerBoolConversionError under jit."""
+import jax
+
+
+@jax.jit
+def clamp(x, limit):
+    if x > limit:
+        return limit
+    return x

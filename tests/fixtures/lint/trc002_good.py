@@ -1,0 +1,15 @@
+# repolint: zone=kernels
+"""Good: branches only on statics — static_argnames params and shapes."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def clamp(x, mode):
+    if mode == "relu":
+        return jnp.maximum(x, 0.0)
+    if x.shape[0] > 8:
+        return x * 0.5
+    return x

@@ -1,0 +1,12 @@
+# repolint: zone=kernels
+"""Bad: host numpy materialized inside a Pallas kernel body."""
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _double_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + np.zeros((8, 128), np.float32)
+
+
+def double(x):
+    return pl.pallas_call(_double_kernel, out_shape=x)(x)

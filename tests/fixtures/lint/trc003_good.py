@@ -1,0 +1,12 @@
+# repolint: zone=kernels
+"""Good: kernel body uses only jnp ops on refs and Python scalars."""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _double_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * jnp.float32(2.0)
+
+
+def double(x):
+    return pl.pallas_call(_double_kernel, out_shape=x)(x)

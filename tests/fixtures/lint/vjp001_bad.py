@@ -1,0 +1,9 @@
+# repolint: zone=kernels.ops
+"""Bad: a public op wrapper with no kernels/vjp.py classification — it
+would ship forward-only (the gap PR 5 closed)."""
+from repro.kernels.ops import resolve_impl
+
+
+def broken_blocks(points, *, impl=None, chunk=None):
+    impl = resolve_impl(impl)
+    return points

@@ -1,0 +1,258 @@
+"""Tests for repro.analysis — the contract linter + abstract checker.
+
+Three layers:
+
+* **fixtures** — a good/bad source pair per rule under
+  ``tests/fixtures/lint/``; bad must fire exactly its rule, good must be
+  clean, and the CLI exit codes must gate accordingly.
+* **self-check** — the live ``src/repro`` tree lints clean (the property
+  CI enforces), and a mutation smoke-test proves the linter would have
+  caught the PR-5 clock-mixing bug if reintroduced in serve/engine.py.
+* **abstract** — the eval_shape interface matrix passes on the real ops
+  and each ABS rule fires on a deliberately broken synthetic OpCase.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import abstract, cli, walker, zones
+from repro.analysis.report import Finding, sort_findings, summarize
+
+FIXTURES = Path(__file__).parent / "fixtures" / "lint"
+
+BAD = [
+    ("clk001_bad.py", "CLK001"),
+    ("clk002_bad.py", "CLK002"),
+    ("clk003_bad.py", "CLK003"),
+    ("trc001_bad.py", "TRC001"),
+    ("trc002_bad.py", "TRC002"),
+    ("trc003_bad.py", "TRC003"),
+    ("vjp001_bad.py", "VJP001"),
+    ("dsp001_bad.py", "DSP001"),
+    ("dsp002_bad.py", "DSP002"),
+    ("pragma_unused.py", "PRG001"),
+]
+
+GOOD = ["clk001_good.py", "clk002_good.py", "clk003_good.py",
+        "trc001_good.py", "trc002_good.py", "trc003_good.py",
+        "vjp001_good.py", "dsp001_good.py", "dsp002_good.py",
+        "pragma_ok.py"]
+
+
+# ---------------------------------------------------------------- fixtures
+
+@pytest.mark.parametrize("name,rule", BAD)
+def test_bad_fixture_fires_its_rule(name, rule):
+    findings = walker.lint_paths([FIXTURES / name])
+    assert rule in {f.rule for f in findings}, \
+        f"{name}: expected {rule}, got {sorted({f.rule for f in findings})}"
+    for f in findings:
+        assert f.path.endswith(name) and f.line >= 1
+
+
+@pytest.mark.parametrize("name", GOOD)
+def test_good_fixture_is_clean(name):
+    findings = walker.lint_paths([FIXTURES / name])
+    assert findings == [], [f.format() for f in findings]
+
+
+@pytest.mark.parametrize("name,rule", BAD)
+def test_cli_fails_on_bad_fixture(name, rule, capsys):
+    # --strict so the WARN-severity CLK003 fixture gates too.
+    assert cli.main([str(FIXTURES / name), "--strict"]) == 1
+    out = capsys.readouterr().out
+    assert rule in out and name in out
+
+
+@pytest.mark.parametrize("name", GOOD)
+def test_cli_passes_on_good_fixture(name, capsys):
+    assert cli.main([str(FIXTURES / name), "--strict"]) == 0
+
+
+def test_warnings_gate_only_under_strict():
+    bad = str(FIXTURES / "clk003_bad.py")
+    assert cli.main([bad]) == 0          # CLK003 is WARN severity
+    assert cli.main([bad, "--strict"]) == 1
+
+
+def test_rules_flag_narrows_the_run():
+    bad = str(FIXTURES / "clk001_bad.py")
+    assert cli.main([bad, "--rules", "CLK001"]) == 1
+    assert cli.main([bad, "--rules", "TRC001"]) == 0
+
+
+def test_list_rules(capsys):
+    assert cli.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ("CLK001", "TRC002", "VJP001", "ABS001", "PRG001"):
+        assert rule in out
+
+
+# -------------------------------------------------------------- suppression
+
+def test_pragma_suppresses_only_its_line_and_rule():
+    text = (FIXTURES / "pragma_ok.py").read_text()
+    assert walker.lint_source(text, "pragma_ok.py", zone="train") == []
+    # The same pragma does not excuse a different rule id.
+    swapped = text.replace("disable=CLK003", "disable=TRC001")
+    findings = walker.lint_source(swapped, "pragma_ok.py", zone="train")
+    assert {f.rule for f in findings} == {"CLK003", "PRG001"}
+
+
+def test_pragma_in_docstring_is_not_a_pragma():
+    text = ('"""Docs may quote `# repolint: disable=CLK003` freely."""\n'
+            "X = 1\n")
+    assert walker.lint_source(text, "doc.py", zone="train") == []
+
+
+# ----------------------------------------------------------- zones / report
+
+def test_zone_of_paths():
+    assert zones.zone_of("src/repro/serve/engine.py") == "serve"
+    assert zones.zone_of("src/repro/kernels/ops.py") == "kernels.ops"
+    assert zones.zone_of("src/repro/kernels/fps.py") == "kernels"
+    assert zones.zone_of("somewhere/else.py") == "other"
+    assert zones.zone_of("f.py", "# repolint: zone=scene") == "scene"
+
+
+def test_finding_format_and_sort():
+    a = Finding(path="b.py", line=3, rule="CLK001", severity="error",
+                message="m")
+    b = Finding(path="a.py", line=9, rule="CLK003", severity="warn",
+                message="m")
+    assert a.format() == "b.py:3 CLK001 error m"
+    assert sort_findings([a, b])[0].path == "a.py"
+    assert "1 error" in summarize([a, b])
+
+
+# ------------------------------------------------------ live-tree self-check
+
+def test_live_tree_lints_clean():
+    findings = walker.lint_tree()
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_mutation_reintroducing_wall_clock_is_caught():
+    """The PR-5 bug class: a wall-clock read sneaking back into the serving
+    engine must trip CLK001."""
+    path = walker.repo_root() / "src" / "repro" / "serve" / "engine.py"
+    clean = path.read_text()
+    baseline = walker.lint_source(clean, "src/repro/serve/engine.py")
+    assert baseline == [], [f.format() for f in baseline]
+
+    mutated = clean + ("\n\ndef _leaky_latency(start):\n"
+                       "    return time.time() - start\n")
+    findings = walker.lint_source(mutated, "src/repro/serve/engine.py")
+    assert "CLK001" in {f.rule for f in findings}
+
+
+# ------------------------------------------------------------ abstract layer
+
+def test_abstract_matrix_is_clean_on_live_ops():
+    findings = abstract.run_interface_checks(matrix=(abstract.MATRIX[0],))
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def _aval(shape):
+    import jax
+    import jax.numpy as jnp
+
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def test_abstract_catches_impl_divergence_and_bad_tiles():
+    import jax
+
+    case = abstract.OpCase(
+        name="bogus", wrapper=abstract.run_interface_checks,
+        make_inputs=lambda d: (_aval((4, 8)),),
+        # pallas path drops a row: ABS001 must flag the parity break.
+        call=lambda inp, impl, chunk, d: jax.eval_shape(
+            (lambda x: x) if impl == "xla" else (lambda x: x[:2]), *inp),
+        oracle=lambda d: jax.eval_shape(lambda x: x, *(_aval((4, 8)),)),
+        tiles=lambda d: [],
+    )
+    rules = {f.rule for f in abstract.check_case(case, {})}
+    assert rules == {"ABS001"}
+
+
+def test_abstract_catches_oracle_mismatch_and_tile_violations():
+    import jax
+
+    case = abstract.OpCase(
+        name="bogus", wrapper=abstract.run_interface_checks,
+        make_inputs=lambda d: (_aval((4, 8)),),
+        call=lambda inp, impl, chunk, d: jax.eval_shape(lambda x: x, *inp),
+        # oracle says (4, 9): ABS002.
+        oracle=lambda d: jax.eval_shape(lambda: __import__("jax").numpy
+                                        .zeros((4, 9))),
+        tiles=lambda d: [
+            # block does not divide array: ABS003.
+            abstract.Tile("ragged", (4, 256), (3, 256)),
+            # 20 MiB single tile: ABS004.
+            abstract.Tile("huge", (2048, 2560), (2048, 2560)),
+            # non-ref intermediates are exempt from divisibility...
+            abstract.Tile("scratch", (4, 200), (3, 200), ref=False),
+        ],
+    )
+    rules = {f.rule for f in abstract.check_case(case, {})}
+    assert rules == {"ABS002", "ABS003", "ABS004"}
+
+
+def test_tile_nbytes():
+    t = abstract.Tile("t", (8, 128), (8, 128))
+    assert t.nbytes == 8 * 128 * 4
+
+
+# -------------------------------------------------------- bench drift gate
+
+def _check_bench():
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "check_bench",
+        Path(__file__).parents[1] / "scripts" / "check_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_bench_compare_gates_regressions():
+    cb = _check_bench()
+    old = {"slow_op": 1000.0, "tiny_op": 50.0, "gone_op": 800.0}
+    new = {"slow_op": 1900.0, "tiny_op": 120.0, "fresh_op": 900.0}
+    failures, notes = cb.compare(new, old, tolerance=1.5, min_us=200.0)
+    # slow_op regressed 1.9x > 1.5x; gone_op vanished; tiny_op jitter is
+    # clamped under the floor; fresh_op has no baseline -> note only.
+    assert len(failures) == 2
+    assert any("slow_op" in f for f in failures)
+    assert any("gone_op" in f for f in failures)
+    assert any("fresh_op" in n for n in notes)
+    assert not any("tiny_op" in f for f in failures)
+
+
+def test_check_bench_floor_still_catches_blowups():
+    cb = _check_bench()
+    failures, _ = cb.compare({"op": 5000.0}, {"op": 100.0},
+                             tolerance=1.5, min_us=200.0)
+    assert failures, "a sub-floor row regressing 50x must still gate"
+
+
+def test_check_bench_cli_roundtrip(tmp_path):
+    cb = _check_bench()
+    payload = {"suite": "demo", "rows": [
+        {"name": "op", "us_per_call": 1000.0, "derived": ""}]}
+    fresh = tmp_path / "BENCH_demo.json"
+    fresh.write_text(__import__("json").dumps(payload))
+    hist = tmp_path / "history"
+    # First run seeds the snapshot, second run compares clean.
+    assert cb.main([str(fresh), "--history", str(hist)]) == 0
+    assert (hist / "BENCH_demo.json").exists()
+    assert cb.main([str(fresh), "--history", str(hist)]) == 0
+    # A 10x regression against the snapshot gates.
+    payload["rows"][0]["us_per_call"] = 10000.0
+    fresh.write_text(__import__("json").dumps(payload))
+    assert cb.main([str(fresh), "--history", str(hist)]) == 1
+    # --update blesses the new numbers.
+    assert cb.main([str(fresh), "--history", str(hist), "--update"]) == 0
+    assert cb.main([str(fresh), "--history", str(hist)]) == 0
